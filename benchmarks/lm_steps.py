@@ -1,0 +1,51 @@
+"""Framework micro-bench: reduced-config train & decode step times per arch
+(CPU backend -- relative numbers; absolute perf lives in the roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs import ARCH_IDS, get_config
+from repro.data.tokens import pipeline_for
+from repro.models.model import LMModel
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime.train_loop import make_train_step
+
+
+def run(batch: int = 2, seq: int = 64) -> list[str]:
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        model = LMModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pipe = pipeline_for(cfg, batch, seq)
+        b = pipe.batch_at(0)
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, opt_cfg, ScheduleConfig(), donate=False)
+        opt = adamw_init(params, opt_cfg)
+        us = time_call(lambda: step(params, opt, b), warmup=1, iters=3)
+        tok_s = batch * seq / (us / 1e6)
+        rows.append(row(f"lm/train/{arch}", us, f"tokens_per_s={tok_s:.0f}"))
+
+        caches = model.init_caches(batch, 32)
+        tok = (
+            jnp.zeros((batch, 1), jnp.int32)
+            if cfg.frontend == "none"
+            else jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+        )
+
+        @jax.jit
+        def decode_step(params, caches, tok):
+            lg, c, _ = model.apply(params, tok, caches=caches)
+            return lg
+
+        us_d = time_call(lambda: decode_step(params, caches, tok),
+                         warmup=1, iters=3)
+        rows.append(row(f"lm/decode/{arch}", us_d, f"per_token_us={us_d/batch:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

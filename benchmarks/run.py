@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows (benchmarks.common.row).
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run table4     # one table
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:])
+
+    def want(name: str) -> bool:
+        return not which or name in which
+
+    print("name,us_per_call,derived")
+    if want("table1"):
+        from benchmarks import table1_interp_error
+        table1_interp_error.run()
+    if want("table2"):
+        from benchmarks import table2_memory
+        table2_memory.run()
+    if want("table3"):
+        from benchmarks import table3_accuracy
+        table3_accuracy.run()
+    if want("table4"):
+        from benchmarks import table4_throughput
+        table4_throughput.run()
+    if want("lm"):
+        from benchmarks import lm_steps
+        lm_steps.run()
+
+
+if __name__ == "__main__":
+    main()

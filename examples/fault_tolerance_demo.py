@@ -1,0 +1,95 @@
+"""Fault-tolerance demo: train with injected node failures, recover from
+checkpoints, and elastically reshard onto a smaller mesh.
+
+  PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.data.tokens import pipeline_for
+from repro.models.config import ModelConfig
+from repro.models.model import LMModel
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.train_loop import SimulatedNodeFailure, TrainConfig, Trainer
+
+CFG = ModelConfig(
+    name="ft-demo", family="dense", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=512, q_chunk=32, kv_chunk=32,
+)
+
+
+def main():
+    model = LMModel(CFG)
+    ckdir = tempfile.mkdtemp(prefix="ft_demo_")
+
+    # ---- 1. training with two injected failures --------------------------
+    crashes = {"steps": [7, 13], "seen": []}
+
+    def injector(step):
+        if step in crashes["steps"] and step not in crashes["seen"]:
+            crashes["seen"].append(step)
+            print(f"  !! injected node failure at step {step}")
+            raise SimulatedNodeFailure(f"node lost at step {step}")
+
+    trainer = Trainer(
+        model,
+        pipeline_for(CFG, batch=4, seq_len=64, seed=0),
+        TrainConfig(num_steps=20, ckpt_every=5, ckpt_dir=ckdir, log_every=5),
+        sched_cfg=ScheduleConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20),
+        failure_injector=injector,
+    )
+    result = trainer.train(state=trainer.init_state())
+    print(f"recovered from {result['failures']} failures, "
+          f"finished at step {result['step']}")
+
+    # ---- 2. the run is bitwise identical to a failure-free run -----------
+    clean = Trainer(
+        model,
+        pipeline_for(CFG, batch=4, seq_len=64, seed=0),
+        TrainConfig(num_steps=20, ckpt_every=5,
+                    ckpt_dir=tempfile.mkdtemp(prefix="ft_clean_"),
+                    log_every=5),
+        sched_cfg=ScheduleConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20),
+    )
+    clean_result = clean.train(state=clean.init_state())
+    diffs = [
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(
+            jax.tree.leaves(result["state"]["params"]),
+            jax.tree.leaves(clean_result["state"]["params"]),
+        )
+    ]
+    print(f"max param diff vs failure-free run: {max(diffs):.2e} "
+          f"(data is a pure function of step -> bitwise replay)")
+
+    # ---- 3. straggler detection ------------------------------------------
+    t = [0.0]
+    mon = HeartbeatMonitor(["host0", "host1", "host2"], timeout=10.0,
+                           straggler_factor=2.0, clock=lambda: t[0])
+    for step in range(1, 13):
+        t[0] = float(step)
+        mon.beat("host0", step)
+        if step <= 3:
+            mon.beat("host1", step)
+        if step % 4 == 0:
+            mon.beat("host2", step // 4)
+    t[0] = 14.0
+    print(f"dead hosts: {mon.dead_hosts()}  stragglers: {mon.stragglers()}")
+
+    # ---- 4. elastic reshard of the checkpoint -----------------------------
+    mgr = CheckpointManager(ckdir)
+    step, restored = mgr.restore(
+        jax.eval_shape(lambda: trainer.init_state())
+    )
+    print(f"restored checkpoint at step {step}; leaves: "
+          f"{len(jax.tree.leaves(restored))} "
+          f"(reshardable onto any mesh via runtime.fault_tolerance."
+          f"elastic_reshard)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small LM with batched requests (wave-batching engine).
+
+  PYTHONPATH=src python examples/lm_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import LMModel
+from repro.serving.engine import ServeEngine
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=1024,
+    q_chunk=32, kv_chunk=32,
+)
+
+
+def main():
+    model = LMModel(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, CFG.vocab_size, size=int(rng.integers(4, 24)))
+        for _ in range(10)
+    ]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new_tokens=32)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    print(f"{len(prompts)} requests (len 4..24) -> {total} tokens "
+          f"in {dt:.1f}s = {total/dt:.1f} tok/s (batch=4 waves)")
+    for i, o in enumerate(outs[:3]):
+        print(f"  req{i} ({len(prompts[i])}-token prompt): {o[:10]}...")
+
+
+if __name__ == "__main__":
+    main()

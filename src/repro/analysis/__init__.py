@@ -1,0 +1,1 @@
+from repro.analysis.roofline import roofline_terms, analytic_flops  # noqa: F401

@@ -1,0 +1,69 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+
+  PYTHONPATH=src python -m repro.analysis.report
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.roofline import (
+    RooflineResult, load_records, roofline_terms,
+)
+from repro.configs import get_config
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def build_table(mesh: str = "16x16") -> list[RooflineResult]:
+    records = [r for r in load_records(os.path.join(RESULTS, mesh))]
+    out = []
+    for rec in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        cfg = get_config(rec["arch"])
+        out.append(roofline_terms(rec, cfg))
+    return out
+
+
+def markdown(results: list[RooflineResult]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute ms | memory ms | collective ms "
+        "| dominant | useful/executed | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(r.as_row())
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(results: list[RooflineResult]) -> dict:
+    """worst roofline fraction / most collective-bound / most representative
+    of the paper's technique (the MoE arch whose static capacity dispatch is
+    the LM-side instance of the paper's irregular->regular move)."""
+    worst = min(results, key=lambda r: r.roofline_fraction)
+    coll = max(results, key=lambda r: r.collective_s / max(
+        r.compute_s, r.memory_s, 1e-30))
+    moe_cells = [r for r in results
+                 if r.arch == "deepseek-v2-236b" and r.shape == "train_4k"]
+    rep = moe_cells[0] if moe_cells else results[0]
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        path = os.path.join(RESULTS, mesh)
+        if not os.path.isdir(path):
+            continue
+        results = build_table(mesh)
+        print(f"\n## Roofline table — mesh {mesh} ({len(results)} cells)\n")
+        print(markdown(results))
+        if mesh == "16x16":
+            picks = pick_hillclimb_cells(results)
+            print("\n### Hillclimb picks")
+            for k, r in picks.items():
+                print(f"- {k}: {r.arch} x {r.shape} "
+                      f"(dominant={r.dominant}, frac={r.roofline_fraction:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""Roofline analysis for the dry-run cells (TPU v5e targets).
+
+Three terms per (arch x shape x mesh):
+
+    compute    = FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HBM bytes / (chips * 819e9 B/s)
+    collective = collective bytes / (chips * 50e9 B/s per ICI link)
+
+Sources & caveats (also in EXPERIMENTS.md):
+  * XLA's cost_analysis counts while-loop BODIES ONCE (scan trip counts are
+    invisible to HloCostAnalysis), so the compiled numbers under-count any
+    scanned computation (microbatch loop, unit stack, attention chunk
+    loops).  We therefore report BOTH the raw HLO numbers and an ANALYTIC
+    model with exact trip counts; the roofline terms use the analytic
+    FLOPs/bytes, while the HLO text supplies the collective op inventory
+    (kinds + per-iteration payloads), scaled by the loop trip count that
+    encloses them.
+  * MODEL_FLOPS = 6*N_active*D tokens for training (2 fwd + 4 bwd),
+    2*N_active per token for inference, plus explicit attention terms.
+  * EXECUTED_FLOPS adds the remat recompute (policy: nothing_saveable =>
+    one extra forward in the backward pass -> 8*N*D + 4/3x attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+from repro.configs.shapes import SHAPES
+from repro.models.config import LayerKind, ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+# --------------------------------------------------------------------------
+# analytic FLOPs
+# --------------------------------------------------------------------------
+def _attn_flops_per_token(cfg: ModelConfig, kind: LayerKind, context: int) -> float:
+    """Score+readout FLOPs per query token for one attention layer."""
+    if kind == LayerKind.ATTN_LOCAL:
+        context = min(context, cfg.sliding_window)
+    h, hd = cfg.num_heads, cfg.head_dim
+    if kind == LayerKind.MLA:
+        hd = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+    return 2.0 * 2.0 * h * hd * context     # QK^T + PV, 2 FLOPs/MAC
+
+
+def _mixer_state_flops_per_token(cfg: ModelConfig, kind: LayerKind) -> float:
+    """Sequence-mixer state update FLOPs per token (mamba/xlstm)."""
+    if kind == LayerKind.MAMBA:
+        d_in = cfg.mamba.expand * cfg.d_model
+        n = cfg.mamba.d_state
+        return 2.0 * d_in * n * 3 + 2.0 * d_in * cfg.mamba.d_conv
+    if kind == LayerKind.MLSTM:
+        from repro.models.xlstm import MLSTM_CHUNK
+        d_inner = 2 * cfg.d_model
+        dh = d_inner // 4            # MLSTM_HEADS
+        # chunkwise: intra-chunk quadratic (~chunk per token) + state readout
+        return 2.0 * d_inner * (MLSTM_CHUNK + 2 * dh)
+    if kind == LayerKind.SLSTM:
+        from repro.models.xlstm import SLSTM_HEADS
+        dh = cfg.d_model // SLSTM_HEADS
+        return 2.0 * SLSTM_HEADS * dh * 4 * dh
+    return 0.0
+
+
+def analytic_flops(cfg: ModelConfig, shape_name: str) -> dict:
+    """Returns {model_flops, executed_flops} TOTAL across chips, one step."""
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    n_active = cfg.active_param_count()
+
+    # Implementation-aware knobs: blockwise attention computes the FULL
+    # S x S score grid unless causal block skipping is on (cfg.causal_skip);
+    # remat policy decides how much forward is recomputed in backward.
+    causal_ctx = s // 2
+    exec_ctx = causal_ctx if getattr(cfg, "causal_skip", False) else s
+
+    if spec.mode == "train":
+        tokens = b * s
+        base = 6.0 * n_active * tokens               # 2 fwd + 4 bwd
+        attn_model, attn_exec = 0.0, 0.0
+        for kind in cfg.layer_kinds:
+            if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL, LayerKind.MLA):
+                attn_model += tokens * _attn_flops_per_token(cfg, kind, causal_ctx) * 3
+                attn_exec += tokens * _attn_flops_per_token(cfg, kind, exec_ctx) * 3
+            else:
+                m = tokens * _mixer_state_flops_per_token(cfg, kind) * 3
+                attn_model += m
+                attn_exec += m
+        model = base + attn_model
+        policy = getattr(cfg, "remat_policy", "nothing")
+        if policy == "nothing":
+            # full forward recompute in backward
+            recompute = 2.0 * n_active * tokens + attn_exec / 3.0
+        elif policy == "names":
+            # mixer/MLP outputs saved: recompute projections only (~40% fwd)
+            recompute = 0.8 * n_active * tokens
+        else:                                        # dots: nearly free bwd
+            recompute = 0.2 * n_active * tokens
+        executed = base + attn_exec + recompute
+        return {"model_flops": model, "executed_flops": executed}
+
+    if spec.mode == "prefill":
+        tokens = b * s
+        base = 2.0 * n_active * tokens
+        attn_model, attn_exec = 0.0, 0.0
+        for kind in cfg.layer_kinds:
+            if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL, LayerKind.MLA):
+                attn_model += tokens * _attn_flops_per_token(cfg, kind, causal_ctx)
+                attn_exec += tokens * _attn_flops_per_token(cfg, kind, exec_ctx)
+            else:
+                m = tokens * _mixer_state_flops_per_token(cfg, kind)
+                attn_model += m
+                attn_exec += m
+        return {"model_flops": base + attn_model,
+                "executed_flops": base + attn_exec}
+
+    # decode: one token per sequence against a cache of depth s
+    tokens = b * 1
+    base = 2.0 * n_active * tokens
+    attn = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL, LayerKind.MLA):
+            attn += tokens * _attn_flops_per_token(cfg, kind, s)
+        else:
+            attn += tokens * _mixer_state_flops_per_token(cfg, kind)
+    return {"model_flops": base + attn, "executed_flops": base + attn}
+
+
+# --------------------------------------------------------------------------
+# analytic HBM bytes
+# --------------------------------------------------------------------------
+def analytic_bytes(cfg: ModelConfig, shape_name: str, devices: int,
+                   microbatches: int = 1) -> float:
+    """HBM bytes PER DEVICE per step (coarse, documented model).
+
+    train: each microbatch reads the local param shard (bf16 compute copy) and
+    writes/reads gradient + optimizer state once per step; activations are
+    written+read once per microbatch (remat recomputes instead of storing).
+    serve: params read once + cache read/write.
+    """
+    spec = SHAPES[shape_name]
+    n = cfg.param_count()
+    p_local = n / devices
+    if spec.mode == "train":
+        b, s = spec.global_batch, spec.seq_len
+        tokens_local = b * s / devices
+        act = tokens_local * cfg.d_model * 2 * 2 * len(cfg.layer_kinds) / max(
+            len(cfg.pattern_unit), 1
+        )  # one residual checkpoint per unit per microbatch, bf16 rw
+        return (
+            microbatches * p_local * 2 * 2        # param shard read fwd+bwd (bf16)
+            + p_local * (4 + 4 + 4 + 4)           # grads rw + m/v rw (fp32-ish)
+            + act * 2
+        )
+    if spec.mode == "prefill":
+        b, s = spec.global_batch, spec.seq_len
+        tokens_local = b * s / devices
+        cache = _cache_bytes(cfg, b, s) / devices
+        return p_local * 2 + cache + tokens_local * cfg.d_model * 2 * 4
+    # decode
+    b, s = spec.global_batch, spec.seq_len
+    cache = _cache_bytes(cfg, b, s) / devices
+    return p_local * 2 + cache                     # read whole cache + params
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> float:
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+            total += 2 * batch * max_len * cfg.num_kv_heads * cfg.head_dim * 2
+        elif kind == LayerKind.MLA:
+            total += batch * max_len * (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2
+        elif kind == LayerKind.MAMBA:
+            d_in = cfg.mamba.expand * cfg.d_model
+            total += batch * d_in * (cfg.mamba.d_state + cfg.mamba.d_conv) * 4
+        elif kind == LayerKind.MLSTM:
+            d_inner = 2 * cfg.d_model
+            from repro.models.xlstm import MLSTM_HEADS
+            dh = d_inner // MLSTM_HEADS
+            total += batch * MLSTM_HEADS * (dh * dh + dh) * 4
+        elif kind == LayerKind.SLSTM:
+            total += batch * cfg.d_model * 4 * 4
+    return total
+
+
+# --------------------------------------------------------------------------
+# term assembly
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    flops_ratio: float           # MODEL_FLOPS / executed (useful fraction)
+    roofline_fraction: float     # compute_s / max(all terms)
+    note: str = ""
+
+    def as_row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.compute_s*1e3:.1f} | {self.memory_s*1e3:.1f} | "
+            f"{self.collective_s*1e3:.1f} | {self.dominant} | "
+            f"{self.flops_ratio:.2f} | {self.roofline_fraction:.2f} |"
+        )
+
+
+def roofline_terms(record: dict, cfg: ModelConfig) -> RooflineResult:
+    """Derive the three terms from a dry-run record + analytic model."""
+    devices = record["devices"]
+    shape_name = record["shape"]
+    spec = SHAPES[shape_name]
+
+    flops = analytic_flops(cfg, shape_name)
+    microbatches = 1
+    if spec.mode == "train":
+        batch_shards = 1
+        rules_batch = record.get("rules", {}).get("batch") or []
+        mesh_sizes = {"pod": 2, "data": 16, "model": 16}
+        for ax in rules_batch:
+            batch_shards *= mesh_sizes.get(ax, 1)
+        microbatches = max(1, spec.global_batch // max(batch_shards, 1))
+
+    compute_s = flops["executed_flops"] / (devices * PEAK_FLOPS)
+    mem_bytes = analytic_bytes(cfg, shape_name, devices, microbatches)
+    memory_s = mem_bytes / HBM_BW
+
+    # collectives: HLO payload (loop body counted once) x trip count of the
+    # enclosing loops; for train that is the microbatch scan x unit scan,
+    # approximated by microbatches (unit-scan collectives appear once per
+    # microbatch iteration in the same body).
+    coll = record.get("collectives", {})
+    coll_bytes = sum(
+        v for k, v in coll.items() if k != "count"
+    )
+    units = max(cfg.num_units, 1)
+    trip = microbatches * units if spec.mode == "train" else units
+    collective_s = coll_bytes * trip / (devices * ICI_BW)
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    # roofline fraction: time the USEFUL flops would take at peak, over the
+    # bottleneck term -- 1.0 means every cycle is a model flop at the HW
+    # ceiling.  For bandwidth-bound cells the ceiling is the minimal-traffic
+    # memory time, so the fraction reads as memory-roofline occupancy.
+    useful_s = flops["model_flops"] / (devices * PEAK_FLOPS)
+    if dominant == "compute":
+        fraction = useful_s / max(total, 1e-30)
+    else:
+        fraction = memory_s / max(total, 1e-30)
+    return RooflineResult(
+        arch=record["arch"],
+        shape=shape_name,
+        mesh=record["mesh"],
+        devices=devices,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=flops["model_flops"],
+        hlo_flops=record.get("flops", 0.0),
+        flops_ratio=flops["model_flops"] / max(flops["executed_flops"], 1.0),
+        roofline_fraction=min(1.0, fraction),
+    )
+
+
+def load_records(results_dir: str) -> list[dict]:
+    out = []
+    for root, _, files in os.walk(results_dir):
+        for f in sorted(files):
+            if f.endswith(".json"):
+                with open(os.path.join(root, f)) as fh:
+                    out.append(json.load(fh))
+    return out

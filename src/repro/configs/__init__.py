@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> -> ModelConfig (full + reduced)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "yi-9b": "repro.configs.yi_9b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "musicgen-large": "repro.configs.musicgen_large",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

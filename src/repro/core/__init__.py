@@ -1,0 +1,10 @@
+"""ELAS / iELAS core algorithm (the paper's contribution, in JAX)."""
+from repro.core.params import ElasParams, FIG2_PARAMS  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    bad_pixel_rate,
+    disparity_error,
+    elas_baseline_disparity,
+    ielas_disparity,
+)
+from repro.core.interpolation import interpolate_support  # noqa: F401
+from repro.core.support import INVALID, support_from_images  # noqa: F401

@@ -1,0 +1,94 @@
+"""Dense matching: per-pixel MAP disparity over a static candidate set.
+
+For every pixel p the energy
+
+    E(d) = beta * SAD(f_src(p), f_dst(p -/+ d)) - log(gamma + exp(-(d-mu)^2 / 2 sigma^2))
+
+is minimised over K = grid_vector_k candidates from the pixel's grid cell
+plus ``2*plane_radius+1`` candidates around the plane prior mu(p).  The
+candidate count is static (paper: 20 + 5).
+
+The math (cost volume from shifted slices, candidate restriction as a mask
+over the disparity axis, both views from one volume) lives in
+:mod:`repro.kernels.ref`; this module builds the candidate tensors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid_vector import cell_index
+from repro.core.params import ElasParams
+
+
+def candidate_set(
+    mu: jax.Array,             # (H, W) plane prior
+    grid_vec: jax.Array,       # (CH, CW, K)
+    p: ElasParams,
+) -> jax.Array:
+    """(H, W, K + 2R+1) int32 candidate disparities per pixel.
+
+    Disparities are integral (the paper's outputs are 8-bit); the grid
+    vector and the rounded prior neighbourhood are clipped to the search
+    range.
+    """
+    h, w = mu.shape
+    cy, cx = cell_index(h, w, p)
+    cell_cands = grid_vec[cy[:, None], cx[None, :]]              # (H, W, K)
+    radius = jnp.arange(-p.plane_radius, p.plane_radius + 1, dtype=jnp.float32)
+    prior_cands = jnp.round(mu)[..., None] + radius              # (H, W, 2R+1)
+    cands = jnp.concatenate([jnp.round(cell_cands), prior_cands], axis=-1)
+    return jnp.clip(cands, p.disp_min, p.disp_max).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def dense_both_views(
+    desc_l: jax.Array,         # (H, W, 16) int8
+    desc_r: jax.Array,         # (H, W, 16) int8
+    mu_l: jax.Array,           # (H, W) float32 left-view prior
+    mu_r: jax.Array,           # (H, W) float32 right-view prior
+    grid_vec_l: jax.Array,     # (CH, CW, K)
+    grid_vec_r: jax.Array,     # (CH, CW, K)
+    p: ElasParams,
+    backend: str = "ref",
+) -> tuple[jax.Array, jax.Array]:
+    """(disp_l, disp_r), each (H, W) float32 with INVALID sentinels.
+
+    Both views come from ONE cost volume (the right view is its diagonal) --
+    half the SAD compute of two independent passes.
+    """
+    from repro.kernels import ops
+
+    cand_l = candidate_set(mu_l, grid_vec_l, p)
+    cand_r = candidate_set(mu_r, grid_vec_r, p)
+    return ops.dense_match(
+        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, p, backend=backend
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("p", "direction", "backend"))
+def dense_disparity(
+    desc_src: jax.Array,
+    desc_dst: jax.Array,
+    mu: jax.Array,
+    grid_vec: jax.Array,
+    p: ElasParams,
+    direction: int = -1,
+    backend: str = "ref",
+) -> jax.Array:
+    """Single-view compatibility wrapper.
+
+    direction=-1: args are left-view (src=left);  returns the left map.
+    direction=+1: args are right-view (src=right); returns the right map.
+    """
+    if direction == -1:
+        disp_l, _ = dense_both_views(
+            desc_src, desc_dst, mu, mu, grid_vec, grid_vec, p, backend=backend
+        )
+        return disp_l
+    _, disp_r = dense_both_views(
+        desc_dst, desc_src, mu, mu, grid_vec, grid_vec, p, backend=backend
+    )
+    return disp_r

@@ -1,0 +1,65 @@
+"""Support-point filtering (Sec. II-A "Filtering").
+
+Two removals, both expressed as static window ops on the dense support grid:
+
+* **implausible**: a node must have at least ``incon_min_support`` valid
+  neighbours within a ``(2*incon_window+1)^2`` window whose disparity is
+  within ``incon_threshold`` -- otherwise it is inconsistent with its
+  surroundings and corrupts the coarse representation.
+* **redundant**: a node whose row OR column neighbours within
+  ``redun_max_dist`` on BOTH sides hold (near-)identical disparity adds
+  nothing to the coarse mesh and is removed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ElasParams
+from repro.core.support import INVALID
+
+
+def _shift2d(x: jax.Array, dy: int, dx: int, fill: float) -> jax.Array:
+    """Shift a 2-D array by (dy, dx), filling vacated cells."""
+    gh, gw = x.shape
+    padded = jnp.pad(x, ((abs(dy), abs(dy)), (abs(dx), abs(dx))), constant_values=fill)
+    return jax.lax.dynamic_slice(padded, (abs(dy) - dy, abs(dx) - dx), (gh, gw))
+
+
+def remove_inconsistent(grid: jax.Array, p: ElasParams) -> jax.Array:
+    valid = grid != INVALID
+    count = jnp.zeros(grid.shape, jnp.int32)
+    for dy in range(-p.incon_window, p.incon_window + 1):
+        for dx in range(-p.incon_window, p.incon_window + 1):
+            if dy == 0 and dx == 0:
+                continue
+            nb = _shift2d(grid, dy, dx, INVALID)
+            ok = (nb != INVALID) & (jnp.abs(nb - grid) <= p.incon_threshold)
+            count = count + ok.astype(jnp.int32)
+    keep = valid & (count >= p.incon_min_support)
+    return jnp.where(keep, grid, INVALID)
+
+
+def _redundant_axis(grid: jax.Array, p: ElasParams, axis: int) -> jax.Array:
+    """True where a node has near-identical valid neighbours on both sides
+    along ``axis`` within ``redun_max_dist``."""
+    before = jnp.zeros(grid.shape, bool)
+    after = jnp.zeros(grid.shape, bool)
+    for k in range(1, p.redun_max_dist + 1):
+        dy, dx = (k, 0) if axis == 0 else (0, k)
+        nb_b = _shift2d(grid, dy, dx, INVALID)      # neighbour from before (above/left)
+        nb_a = _shift2d(grid, -dy, -dx, INVALID)    # neighbour from after (below/right)
+        before |= (nb_b != INVALID) & (jnp.abs(nb_b - grid) <= p.redun_threshold)
+        after |= (nb_a != INVALID) & (jnp.abs(nb_a - grid) <= p.redun_threshold)
+    return before & after
+
+
+def remove_redundant(grid: jax.Array, p: ElasParams) -> jax.Array:
+    valid = grid != INVALID
+    redundant = _redundant_axis(grid, p, axis=0) | _redundant_axis(grid, p, axis=1)
+    keep = valid & ~redundant
+    return jnp.where(keep, grid, INVALID)
+
+
+def filter_support(grid: jax.Array, p: ElasParams) -> jax.Array:
+    return remove_redundant(remove_inconsistent(grid, p), p)

@@ -1,0 +1,138 @@
+"""End-to-end stereo pipelines.
+
+Two paths, mirroring the paper's Table III/IV comparison:
+
+* :func:`ielas_disparity` -- the paper's fully-on-accelerator pipeline:
+  support interpolation -> static regular triangulation.  jit-compiles to a
+  single XLA computation (one "frame program"), batched with vmap.
+* :func:`elas_baseline_disparity` -- the hybrid baseline ([6]-style): the
+  sparse support points round-trip to the HOST for irregular Delaunay
+  triangulation, then dense matching resumes on device.  The host hop is the
+  cost the paper eliminates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import descriptor as desc_mod
+from repro.core import triangulation
+from repro.core.dense import dense_both_views, dense_disparity
+from repro.core.filtering import filter_support
+from repro.core.grid_vector import build_grid_vector
+from repro.core.interpolation import interpolate_support
+from repro.core.params import ElasParams
+from repro.core.postprocess import postprocess
+from repro.core.prior import plane_prior, right_view_support
+from repro.core.support import extract_support_grid
+
+
+def _dense_stage(
+    dl: jax.Array,
+    dr: jax.Array,
+    support_left: jax.Array,   # complete (interpolated) left-view support grid
+    p: ElasParams,
+    backend: str = "ref",
+) -> jax.Array:
+    """Dense disparity for both views + post-processing -> final left map."""
+    h, w = dl.shape[:2]
+    mu_l = plane_prior(support_left, h, w, p)
+    gv_l = build_grid_vector(support_left, p)
+
+    sup_r = right_view_support(support_left, p)
+    sup_r = interpolate_support(sup_r, p)
+    mu_r = plane_prior(sup_r, h, w, p)
+    gv_r = build_grid_vector(sup_r, p)
+
+    disp_l, disp_r = dense_both_views(
+        dl, dr, mu_l, mu_r, gv_l, gv_r, p, backend=backend
+    )
+    return postprocess(disp_l, disp_r, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def ielas_disparity(
+    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+) -> jax.Array:
+    """iELAS: fully on-device, single static XLA program. (H, W) float32."""
+    dl = desc_mod.extract(img_left)
+    dr = desc_mod.extract(img_right)
+    support = extract_support_grid(dl, dr, p, backend=backend)
+    support = filter_support(support, p)
+    support = interpolate_support(support, p)          # THE iELAS step
+    return _dense_stage(dl, dr, support, p, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def ielas_support_stage(
+    img_left: jax.Array, img_right: jax.Array, p: ElasParams
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Front half (descriptors + filtered sparse support) shared by baseline."""
+    dl = desc_mod.extract(img_left)
+    dr = desc_mod.extract(img_right)
+    support = extract_support_grid(dl, dr, p)
+    support = filter_support(support, p)
+    return dl, dr, support
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _baseline_back_half(
+    dl: jax.Array,
+    dr: jax.Array,
+    support_sparse: jax.Array,
+    mu_l: jax.Array,
+    mu_r: jax.Array,
+    p: ElasParams,
+) -> jax.Array:
+    gv_l = build_grid_vector(support_sparse, p)
+    sup_r = right_view_support(support_sparse, p)
+    gv_r = build_grid_vector(sup_r, p)
+    disp_l, disp_r = dense_both_views(dl, dr, mu_l, mu_r, gv_l, gv_r, p)
+    return postprocess(disp_l, disp_r, p)
+
+
+def elas_baseline_disparity(
+    img_left: jax.Array, img_right: jax.Array, p: ElasParams
+) -> jax.Array:
+    """Original-ELAS baseline with host-side Delaunay (the [6]-style hybrid).
+
+    NOT a single jit program by construction: the support grid is pulled to
+    the host, triangulated irregularly, and the rasterised prior is pushed
+    back.  Keep it that way -- the host round-trip IS the baseline cost.
+    """
+    h, w = img_left.shape[:2]
+    dl, dr, support = ielas_support_stage(img_left, img_right, p)
+
+    support_np = np.asarray(support)                    # device -> host
+    mu_l = triangulation.delaunay_prior(support_np, h, w, p)
+
+    sup_r = right_view_support(support, p)
+    mu_r = triangulation.delaunay_prior(np.asarray(sup_r), h, w, p)
+
+    return _baseline_back_half(
+        dl, dr, support, jnp.asarray(mu_l), jnp.asarray(mu_r), p
+    )
+
+
+def disparity_error(
+    disp: jax.Array, ground_truth: jax.Array, invalid: float = -1.0
+) -> jax.Array:
+    """Paper Eq. (1): Error = (1/N) * sum |D - D*| / D*, over valid pixels."""
+    gt_ok = ground_truth > 0
+    ok = (disp != invalid) & gt_ok
+    rel = jnp.where(ok, jnp.abs(disp - ground_truth) / jnp.maximum(ground_truth, 1e-6), 0.0)
+    return jnp.sum(rel) / jnp.maximum(jnp.sum(ok), 1)
+
+
+def bad_pixel_rate(
+    disp: jax.Array, ground_truth: jax.Array, tau: float = 3.0, invalid: float = -1.0
+) -> jax.Array:
+    """KITTI-style matching error: fraction of pixels off by more than tau
+    (invalid estimates count as errors, as in the paper's Table III)."""
+    gt_ok = ground_truth > 0
+    wrong = (disp == invalid) | (jnp.abs(disp - ground_truth) > tau)
+    return jnp.sum(wrong & gt_ok) / jnp.maximum(jnp.sum(gt_ok), 1)

@@ -1,0 +1,100 @@
+"""Post-processing: left/right consistency, gap interpolation, median filter.
+
+All stages are branch-free window/scan ops (the same nearest-valid-neighbour
+machinery as the support interpolation), so the whole post-process chain
+stays on-device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ElasParams
+
+INVALID = -1.0
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def lr_consistency(
+    disp_left: jax.Array, disp_right: jax.Array, p: ElasParams
+) -> jax.Array:
+    """Invalidate pixels whose right-image counterpart disagrees."""
+    h, w = disp_left.shape
+    u = jnp.arange(w, dtype=jnp.float32)[None, :]
+    ur = jnp.clip(u - disp_left, 0, w - 1).astype(jnp.int32)
+    d_r = jnp.take_along_axis(disp_right, ur, axis=1)
+    ok = (
+        (disp_left != INVALID)
+        & (d_r != INVALID)
+        & (jnp.abs(disp_left - d_r) <= p.lr_check_threshold)
+    )
+    return jnp.where(ok, disp_left, INVALID)
+
+
+def _nearest_lr(disp: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    h, w = disp.shape
+    valid = disp != INVALID
+    col = jnp.broadcast_to(jnp.arange(w)[None, :], disp.shape)
+    big = jnp.int32(1 << 30)   # "no valid neighbour" sentinel
+    idx_l = jax.lax.cummax(jnp.where(valid, col, -1), axis=1)
+    val_l = jnp.take_along_axis(disp, jnp.maximum(idx_l, 0), axis=1)
+    dist_l = jnp.where(idx_l >= 0, col - idx_l, big)
+    rev = jnp.flip(disp, axis=1)
+    validr = rev != INVALID
+    idx_r = jax.lax.cummax(jnp.where(validr, col, -1), axis=1)
+    val_r = jnp.flip(jnp.take_along_axis(rev, jnp.maximum(idx_r, 0), axis=1), axis=1)
+    dist_r = jnp.flip(jnp.where(idx_r >= 0, col - idx_r, big), axis=1)
+    return val_l, dist_l, val_r, dist_r
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def gap_interpolation(disp: jax.Array, p: ElasParams) -> jax.Array:
+    """Fill horizontal invalid runs of length <= ipol_gap_width.
+
+    Smooth gaps (end difference <= 5) are filled linearly; discontinuities
+    take the min (background wins, occlusion-aware) -- libelas semantics.
+    """
+    val_l, dist_l, val_r, dist_r = _nearest_lr(disp)
+    gap = dist_l + dist_r - 1
+    fillable = (
+        (disp == INVALID)
+        & (dist_l < disp.shape[1] + 1)
+        & (dist_r < disp.shape[1] + 1)
+        & (gap <= p.ipol_gap_width)
+    )
+    t = dist_l.astype(jnp.float32) / jnp.maximum(dist_l + dist_r, 1).astype(jnp.float32)
+    linear = val_l + t * (val_r - val_l)
+    fill = jnp.where(jnp.abs(val_l - val_r) <= 5.0, linear, jnp.minimum(val_l, val_r))
+    return jnp.where(fillable, fill, disp)
+
+
+@jax.jit
+def median3x3(disp: jax.Array) -> jax.Array:
+    """3x3 median over valid pixels; invalid pixels stay invalid.
+
+    Invalid neighbours are replaced by the centre value so they do not bias
+    the median (equivalent to clamping the window to valid support).
+    """
+    h, w = disp.shape
+    padded = jnp.pad(disp, 1, mode="edge")
+    stack = []
+    for dy in range(3):
+        for dx in range(3):
+            stack.append(padded[dy : dy + h, dx : dx + w])
+    win = jnp.stack(stack, axis=-1)                       # (H, W, 9)
+    centre = disp[..., None]
+    win = jnp.where(win == INVALID, centre, win)
+    med = jnp.sort(win, axis=-1)[..., 4]
+    return jnp.where(disp == INVALID, INVALID, med)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def postprocess(
+    disp_left: jax.Array, disp_right: jax.Array, p: ElasParams
+) -> jax.Array:
+    d = lr_consistency(disp_left, disp_right, p)
+    d = gap_interpolation(d, p)
+    d = median3x3(d)
+    return d

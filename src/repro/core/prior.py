@@ -1,0 +1,84 @@
+"""Slanted-plane disparity prior from the *regular* support grid.
+
+After iELAS interpolation the support points have fixed coordinates on a
+regular lattice, so their Delaunay triangulation is known statically: each
+lattice cell splits along its TL-BR diagonal into two triangles.  The prior
+mu(p) at a pixel is the plane through the pixel's containing triangle --
+a closed-form, branch-free, gather-only computation.  This is the payoff of
+the paper's technique: the irregular mesh data structure disappears.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ElasParams
+
+
+@functools.partial(jax.jit, static_argnames=("height", "width", "p"))
+def plane_prior(
+    support: jax.Array,        # (GH, GW) complete (interpolated) support grid
+    height: int,
+    width: int,
+    p: ElasParams,
+) -> jax.Array:
+    """Per-pixel prior mu of shape (height, width), float32.
+
+    Pixels outside the node hull extrapolate along the nearest cell's
+    planes (equivalent to libelas' corner support points).
+    """
+    gh, gw = support.shape
+    step = p.candidate_step
+    off = step // 2
+
+    y = jnp.arange(height, dtype=jnp.float32)
+    x = jnp.arange(width, dtype=jnp.float32)
+
+    iy = jnp.clip(jnp.floor((y - off) / step).astype(jnp.int32), 0, gh - 2)
+    jx = jnp.clip(jnp.floor((x - off) / step).astype(jnp.int32), 0, gw - 2)
+    fy = (y - off) / step - iy.astype(jnp.float32)       # may be <0 / >1 at borders
+    fx = (x - off) / step - jx.astype(jnp.float32)
+
+    d_tl = support[iy[:, None], jx[None, :]]
+    d_tr = support[iy[:, None], jx[None, :] + 1]
+    d_bl = support[iy[:, None] + 1, jx[None, :]]
+    d_br = support[iy[:, None] + 1, jx[None, :] + 1]
+
+    fyb = fy[:, None]
+    fxb = fx[None, :]
+    # Upper-right triangle (TL, TR, BR): plane d = TL + fx*(TR-TL) + fy*(BR-TR)
+    upper = d_tl + fxb * (d_tr - d_tl) + fyb * (d_br - d_tr)
+    # Lower-left triangle (TL, BR, BL): plane d = TL + fy*(BL-TL) + fx*(BR-BL)
+    lower = d_tl + fyb * (d_bl - d_tl) + fxb * (d_br - d_bl)
+    return jnp.where(fxb >= fyb, upper, lower)
+
+
+def right_view_support(
+    support_left: jax.Array,   # (GH, GW) left-view grid (may contain INVALID)
+    p: ElasParams,
+) -> jax.Array:
+    """Re-express support points in right-image coordinates.
+
+    A left node at column u with disparity d corresponds to right column
+    u - d.  For each right-view node we take the disparity of the nearest
+    projected left node within one grid pitch; otherwise INVALID.  This is
+    a regular (GW x GW per row) min-reduction -- no scatter.
+    """
+    from repro.core.support import INVALID, candidate_coords
+
+    gh, gw = support_left.shape
+    step = p.candidate_step
+    us = jnp.arange(gw, dtype=jnp.float32) * step + step // 2    # node pixel columns
+
+    valid = support_left != INVALID
+    proj = us[None, :] - support_left                             # right-image columns
+    big = jnp.float32(1e9)
+    # dist[i, j_right, k_left]
+    dist = jnp.abs(proj[:, None, :] - us[None, :, None])
+    dist = jnp.where(valid[:, None, :], dist, big)
+    k = jnp.argmin(dist, axis=-1)                                 # (GH, GW)
+    dmin = jnp.take_along_axis(dist, k[..., None], axis=-1)[..., 0]
+    dval = jnp.take_along_axis(support_left, k, axis=-1)
+    return jnp.where(dmin <= step, dval, INVALID)

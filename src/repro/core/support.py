@@ -1,0 +1,63 @@
+"""Support-point extraction over a regular candidate grid.
+
+A sparse set of confident correspondences is computed on a regular grid of
+candidate pixels (pitch = ``candidate_step``) by SAD matching of 16-dim
+int8 descriptors over the full disparity range, with texture, uniqueness
+(ratio) and left/right consistency tests -- libelas' ``computeSupportMatches``
+with the tests the iELAS paper keeps on-chip.
+
+The math lives in :mod:`repro.kernels.ref` (the regularised cost-volume
+formulation shared with the Pallas kernels); this module handles the grid
+bookkeeping.  The result is a DENSE (GH, GW) float32 grid with
+``invalid = -1`` sentinels: keeping the sparse set dense-on-a-grid is the
+representational move that makes every later stage (filtering, the paper's
+interpolation, the regular triangulation) a static-shape vectorised op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptor as desc_mod
+from repro.core.params import ElasParams
+
+INVALID = -1.0
+
+
+def candidate_coords(height: int, width: int, step: int) -> tuple[jax.Array, jax.Array]:
+    """Pixel coordinates (v, u) of the support-candidate grid nodes.
+
+    Nodes sit at ``(i*step + step//2, j*step + step//2)`` so the grid is
+    centred; shapes ``(H//step,)`` and ``(W//step,)``.
+    """
+    gh, gw = height // step, width // step
+    vs = jnp.arange(gh) * step + step // 2
+    us = jnp.arange(gw) * step + step // 2
+    return vs, us
+
+
+def extract_support_grid(
+    desc_left: jax.Array,      # (H, W, 16) int8
+    desc_right: jax.Array,     # (H, W, 16) int8
+    p: ElasParams,
+    backend: str = "ref",
+) -> jax.Array:
+    """Dense support grid (GH, GW) float32, INVALID where no confident match."""
+    from repro.kernels import ops   # late import: kernels build on core.params
+
+    h, w = desc_left.shape[:2]
+    vs, _ = candidate_coords(h, w, p.candidate_step)
+    rows_l = desc_left[vs]          # (GH, W, 16)
+    rows_r = desc_right[vs]         # (GH, W, 16)
+    return ops.support_match(rows_l, rows_r, p, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def support_from_images(
+    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+) -> jax.Array:
+    dl = desc_mod.extract(img_left)
+    dr = desc_mod.extract(img_right)
+    return extract_support_grid(dl, dr, p, backend=backend)

@@ -1,0 +1,1 @@
+from repro.data.stereo import LIGHTING_CONDITIONS, synthetic_stereo_pair  # noqa: F401

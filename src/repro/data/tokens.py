@@ -1,0 +1,113 @@
+"""Deterministic synthetic LM data pipeline.
+
+Generates reproducible token batches (Zipfian marginals + a short-range
+induction pattern so the loss actually decreases) with background
+PREFETCH, sharded placement, and restart determinism: batch content is a
+pure function of (seed, step), so a restarted job resumes on exactly the
+data it would have seen -- the property checkpoint/restart tests rely on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenPipeline:
+    def __init__(
+        self,
+        vocab_size: int,
+        batch: int,
+        seq_len: int,
+        seed: int = 0,
+        frontend: str = "none",
+        d_model: int = 0,
+        mrope: bool = False,
+        prefetch: int = 2,
+    ):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.frontend = frontend
+        self.d_model = d_model
+        self.mrope = mrope
+        self.prefetch = prefetch
+
+    # -- pure function of (seed, step): restart determinism ------------------
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+        b, s, v = self.batch, self.seq_len, self.vocab_size
+        # Zipfian unigrams
+        ranks = np.arange(1, v + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(b, s + 1), p=probs)
+        # induction pattern: random repeats of earlier spans
+        for i in range(b):
+            if s >= 32:
+                src = rng.integers(0, s // 2)
+                length = int(rng.integers(8, 17))
+                dst = int(rng.integers(s // 2, s + 1 - length))
+                toks[i, dst : dst + length] = toks[i, src : src + length]
+        inputs = toks[:, :-1].astype(np.int32)
+        targets = toks[:, 1:].astype(np.int32)
+
+        out = {
+            "targets": jnp.asarray(targets),
+            "mask": jnp.ones((b, s), jnp.float32),
+        }
+        if self.frontend in ("vision_stub", "audio_stub"):
+            emb = rng.standard_normal((b, s, self.d_model)).astype(np.float32)
+            out["inputs"] = jnp.asarray(emb)
+        else:
+            out["inputs"] = jnp.asarray(inputs)
+        if self.mrope:
+            pos = np.broadcast_to(np.arange(s)[None, :, None], (b, s, 3))
+            out["positions"] = jnp.asarray(np.ascontiguousarray(pos), jnp.int32)
+        else:
+            out["positions"] = jnp.asarray(
+                np.broadcast_to(np.arange(s)[None, :], (b, s)), jnp.int32
+            )
+        return out
+
+    # -- prefetching iterator -------------------------------------------------
+    def iterate(self, start_step: int = 0) -> Iterator[dict]:
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self.batch_at(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def pipeline_for(cfg, batch: int, seq_len: int, seed: int = 0) -> TokenPipeline:
+    """Build a pipeline matching a ModelConfig's input modality."""
+    return TokenPipeline(
+        vocab_size=cfg.vocab_size,
+        batch=batch,
+        seq_len=seq_len,
+        seed=seed,
+        frontend=cfg.frontend,
+        d_model=cfg.d_model,
+        mrope=(cfg.pos_embedding == "mrope"),
+    )

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    current_rules,
+    logical_constraint,
+    logical_to_spec,
+    set_rules,
+)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the iELAS compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+validated in interpret mode against the pure-jnp oracles in ref.py;
+ops.py provides the jit'd public wrappers.
+"""
+from repro.kernels.ops import dense_match, median3x3, sobel, support_match  # noqa: F401
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401

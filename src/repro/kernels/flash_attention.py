@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The LM-side hot spot: the roofline tables show prefill/train compute
+dominated by attention at 32k context.  This kernel is the TPU-native
+formulation of the blockwise math in ``repro.models.attention``:
+
+  grid = (B*H, num_q_blocks, num_kv_blocks)   -- kv innermost
+  per (bh, iq): VMEM scratch carries the online-softmax state
+  (m, l, acc) across the kv grid steps; the output block is written once,
+  normalised, on the LAST kv step (TPU grid steps run sequentially, so
+  output revisiting + scratch accumulation is the standard flash pattern).
+
+Fully-masked blocks (kv_pos > q_pos under causality) are skipped with
+pl.when -- the causal-block-skipping optimization of EXPERIMENTS.md §Perf
+expressed at kernel level.
+
+VMEM per program (cq=ck=256, D=128):
+  q/k/v blocks 3 x 256x128 x 4B = 0.4 MiB, scores 256x256 x 4B = 0.25 MiB,
+  scratch acc/m/l ~ 0.14 MiB -- far under budget, so larger blocks are
+  available for tuning on real hardware.
+
+Validated in interpret mode against the pure-jnp oracle
+(ref.flash_attention_ref == plain softmax attention) over shape sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,        # (1, cq, D)
+    k_ref,        # (1, ck, D)
+    v_ref,        # (1, ck, D)
+    out_ref,      # (1, cq, D)
+    acc_ref,      # scratch (cq, D) f32
+    m_ref,        # scratch (cq,) f32
+    l_ref,        # scratch (cq,) f32
+    *,
+    causal: bool,
+    sm_scale: float,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal skipping: block (iq, jk) is fully masked iff the first kv
+    # position exceeds the last q position.
+    first_kv = jk * block_k
+    last_q = (iq + 1) * block_q - 1
+    visible = jnp.logical_or(not causal, first_kv <= last_q)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (cq, D)
+        k = k_ref[0].astype(jnp.float32)               # (ck, D)
+        v = v_ref[0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))
+        ) * sm_scale                                   # (cq, ck)
+        if causal:
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            kv_pos = jk * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            scores = jnp.where(kv_pos <= q_pos, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new[:, None])
+        l_cur = jnp.sum(p, axis=-1)
+        r = jnp.exp(m_prev - m_new)
+        l_new = l_prev * r + l_cur
+        acc_ref[...] = acc_ref[...] * r[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(jk == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        out_ref[0] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,             # (B, H, Sq, D)
+    k: jax.Array,             # (B, H, Skv, D)
+    v: jax.Array,             # (B, H, Skv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, "seq not divisible by block"
+    nq, nk = sq // bq, skv // bk
+    sm_scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=bq,
+        block_k=bk,
+        num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, jk: (bh, jk, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, jk: (bh, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, jk: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running sum l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

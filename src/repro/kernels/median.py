@@ -1,0 +1,38 @@
+"""Pallas TPU kernel: 3x3 valid-aware median (post-processing stage)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def _median_kernel(top_ref, mid_ref, bot_ref, out_ref):
+    out_ref[...] = ref.median3x3_rows_ref(top_ref[...], mid_ref[...], bot_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def median3x3_pallas(
+    disp: jax.Array, *, block_rows: int = 16, interpret: bool = True
+) -> jax.Array:
+    h, w = disp.shape
+    padded = jnp.pad(disp, 1, mode="edge")
+    top = padded[0:h, :]
+    mid = padded[1 : h + 1, :]
+    bot = padded[2 : h + 2, :]
+
+    bh = min(block_rows, h)
+    grid = (pl.cdiv(h, bh),)
+    in_spec = pl.BlockSpec((bh, w + 2), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((bh, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _median_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=interpret,
+    )(top, mid, bot)

@@ -1,0 +1,105 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``backend`` selects the implementation:
+  * ``"ref"``     -- the pure-jnp oracle math (default on CPU: identical
+                     semantics, fast under XLA:CPU).
+  * ``"pallas"``  -- the Pallas kernels; ``interpret=True`` executes the
+                     kernel bodies in Python on CPU (correctness mode),
+                     ``interpret=False`` compiles for TPU.
+
+Core pipeline code calls these wrappers, so switching the whole stereo
+system between oracle and kernel execution is one flag.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ElasParams
+from repro.kernels import ref
+from repro.kernels.dense_match import dense_match_pallas
+from repro.kernels.median import median3x3_pallas
+from repro.kernels.sobel import sobel_pallas
+from repro.kernels.support_match import support_match_pallas
+
+Backend = Literal["ref", "pallas", "pallas_tpu"]
+
+
+def _interpret(backend: Backend) -> bool:
+    return backend != "pallas_tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def sobel(image: jax.Array, backend: Backend = "ref") -> tuple[jax.Array, jax.Array]:
+    if backend == "ref":
+        h, w = image.shape
+        padded = jnp.pad(image.astype(jnp.int32), 1, mode="edge")
+        return ref.sobel_rows_ref(
+            padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
+        )
+    return sobel_pallas(image, interpret=_interpret(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def support_match(
+    desc_l_rows: jax.Array,
+    desc_r_rows: jax.Array,
+    p: ElasParams,
+    backend: Backend = "ref",
+) -> jax.Array:
+    kwargs = dict(
+        num_disp=p.num_disp,
+        step=p.candidate_step,
+        offset=p.candidate_step // 2,
+        support_texture=p.support_texture,
+        support_ratio=p.support_ratio,
+        lr_threshold=p.lr_threshold,
+        disp_min=p.disp_min,
+    )
+    if backend == "ref":
+        return ref.support_match_rows_ref(desc_l_rows, desc_r_rows, **kwargs)
+    return support_match_pallas(
+        desc_l_rows, desc_r_rows, interpret=_interpret(backend), **kwargs
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def dense_match(
+    desc_l: jax.Array,
+    desc_r: jax.Array,
+    mu_l: jax.Array,
+    mu_r: jax.Array,
+    cand_l: jax.Array,
+    cand_r: jax.Array,
+    p: ElasParams,
+    backend: Backend = "ref",
+) -> tuple[jax.Array, jax.Array]:
+    kwargs = dict(
+        num_disp=p.num_disp,
+        beta=p.beta,
+        gamma=p.gamma,
+        sigma=p.sigma,
+        match_texture=p.match_texture,
+    )
+    if backend == "ref":
+        return ref.dense_match_rows_ref(
+            desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, **kwargs
+        )
+    return dense_match_pallas(
+        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
+        interpret=_interpret(backend), **kwargs,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def median3x3(disp: jax.Array, backend: Backend = "ref") -> jax.Array:
+    if backend == "ref":
+        h, w = disp.shape
+        padded = jnp.pad(disp, 1, mode="edge")
+        return ref.median3x3_rows_ref(
+            padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
+        )
+    return median3x3_pallas(disp, interpret=_interpret(backend))

@@ -1,0 +1,262 @@
+"""Pure-jnp oracles for every Pallas kernel, and the shared regularised math.
+
+These functions define the EXACT semantics the kernels implement; the core
+pipeline delegates to them so core == ref == kernel everywhere.
+
+The central reformulation (the TPU translation of the paper's
+"irregular -> regular" move): all matching stages are expressed over a
+dense cost volume
+
+    CV[d, u] = sum_k | desc_L[u, k] - desc_R[u - d, k] |        (int32)
+
+computed with *shifted slices only* (no data-dependent gather).  The
+right-view volume is its diagonal, CV_R[d, u] = CV[d, u + d], again pure
+slices.  Scalar per-candidate lookups (the L/R cross check) become one-hot
+matmuls -- MXU-friendly, gather-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Python literals (NOT jnp arrays): pallas kernel bodies must not capture
+# traced constants, and literals fold into the kernel jaxpr.
+BIG = 1 << 28
+BIGF = 1e9
+INVALID = -1.0
+
+
+# --------------------------------------------------------------------------
+# sobel kernel oracle
+# --------------------------------------------------------------------------
+def sobel_rows_ref(top: jax.Array, mid: jax.Array, bot: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sobel du/dv for a row block given 3 row-shifted views.
+
+    top/mid/bot: (bh, W+2) int32 views of the edge-padded image (rows
+    y-1, y, y+1).  Returns (gx, gy) int8 of shape (bh, W).
+    """
+    w = top.shape[1] - 2
+    l0, c0, r0 = top[:, :w], top[:, 1 : w + 1], top[:, 2 : w + 2]
+    l1, _, r1 = mid[:, :w], mid[:, 1 : w + 1], mid[:, 2 : w + 2]
+    l2, c2, r2 = bot[:, :w], bot[:, 1 : w + 1], bot[:, 2 : w + 2]
+    gx = (l0 + 2 * l1 + l2) - (r0 + 2 * r1 + r2)
+    gy = (l0 + 2 * c0 + r0) - (l2 + 2 * c2 + r2)
+    gx = jnp.clip(gx // 4, -128, 127).astype(jnp.int8)
+    gy = jnp.clip(gy // 4, -128, 127).astype(jnp.int8)
+    return gx, gy
+
+
+# --------------------------------------------------------------------------
+# cost volume building blocks (shared by support + dense)
+# --------------------------------------------------------------------------
+def cost_volume_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int) -> jax.Array:
+    """CV[b, d, u] for a row block.
+
+    desc_l/desc_r: (bh, W, 16) int8.  Returns (bh, D, W) int32; entries with
+    u - d < 0 are BIG.  Built from D shifted slices of desc_r.
+    """
+    bh, w, k = desc_l.shape
+    dl = desc_l.astype(jnp.int32)
+    dr = desc_r.astype(jnp.int32)
+    dr_pad = jnp.pad(dr, ((0, 0), (num_disp, 0), (0, 0)))        # left-pad by D
+    cvs = []
+    for d in range(num_disp):
+        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, num_disp - d, w, axis=1)
+        sad = jnp.sum(jnp.abs(dl - shifted), axis=-1)            # (bh, W)
+        u = jnp.arange(w)[None, :]
+        cvs.append(jnp.where(u - d >= 0, sad, BIG))
+    return jnp.stack(cvs, axis=1)                                # (bh, D, W)
+
+
+def diagonal_volume(cv: jax.Array) -> jax.Array:
+    """CV_R[b, d, u] = CV[b, d, u + d] (right-view volume as diagonal slices).
+
+    Entries with u + d >= W are BIG.
+    """
+    bh, nd, w = cv.shape
+    cv_pad = jnp.pad(cv, ((0, 0), (0, 0), (0, nd)), constant_values=BIG)
+    rows = []
+    for d in range(nd):
+        rows.append(jax.lax.dynamic_slice_in_dim(cv_pad[:, d], d, w, axis=1))
+    return jnp.stack(rows, axis=1)
+
+
+def _best_two(cost: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """argmin, min and second-min excluding the +-1 neighbourhood of argmin.
+
+    cost: (..., D, N) -> (best(int32), min1, min2) each (..., N).
+    """
+    nd = cost.shape[-2]
+    best = jnp.argmin(cost, axis=-2).astype(jnp.int32)           # (..., N)
+    min1 = jnp.min(cost, axis=-2)
+    d_idx = jnp.arange(nd)
+    shape = [1] * cost.ndim
+    shape[-2] = nd
+    d_b = d_idx.reshape(shape)
+    near = jnp.abs(d_b - best[..., None, :]) <= 1
+    min2 = jnp.min(jnp.where(near, BIG, cost), axis=-2)
+    return best, min1, min2
+
+
+def _texture_rows(desc: jax.Array) -> jax.Array:
+    """(bh, W) int32 texture = sum |descriptor|."""
+    return jnp.sum(jnp.abs(desc.astype(jnp.int32)), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# support_match kernel oracle
+# --------------------------------------------------------------------------
+def support_match_rows_ref(
+    desc_l: jax.Array,          # (bh, W, 16) int8 -- candidate rows of left image
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    *,
+    num_disp: int,
+    step: int,
+    offset: int,
+    support_texture: int,
+    support_ratio: float,
+    lr_threshold: int,
+    disp_min: int,
+) -> jax.Array:
+    """Support disparity for the candidate columns of a row block.
+
+    Returns (bh, GW) float32 grid rows: disparity or INVALID.
+    All lookups are strided/diagonal slices + one one-hot matmul.
+    """
+    bh, w, _ = desc_l.shape
+    gw = w // step
+    cv = cost_volume_rows(desc_l, desc_r, num_disp)              # (bh, D, W)
+
+    # -- left->right at candidate columns (strided slice of the volume) ----
+    us = jnp.arange(gw) * step + offset                          # (GW,)
+    cv_cand = jax.lax.slice_in_dim(
+        cv, offset, offset + (gw - 1) * step + 1, stride=step, axis=2
+    )                                                            # (bh, D, GW)
+    best_l, min1_l, min2_l = _best_two(cv_cand)
+    tex_l = _texture_rows(desc_l)[:, us]
+    ok_l = (
+        (min1_l.astype(jnp.float32) < support_ratio * min2_l.astype(jnp.float32))
+        & (tex_l >= support_texture)
+        & (min1_l < BIG)
+    )
+
+    # -- right->left over ALL columns via the diagonal volume ---------------
+    cv_r = diagonal_volume(cv)                                   # (bh, D, W)
+    best_r, min1_r, min2_r = _best_two(cv_r)                     # (bh, W)
+    tex_r = _texture_rows(desc_r)
+    ok_r = (
+        (min1_r.astype(jnp.float32) < support_ratio * min2_r.astype(jnp.float32))
+        & (tex_r >= support_texture)
+        & (min1_r < BIG)
+    )
+
+    # -- cross check: read right result at ur = us - d_l (one-hot matmul) ---
+    ur = jnp.clip(us[None, :] - best_l, 0, w - 1)                # (bh, GW)
+    onehot = (ur[..., None] == jnp.arange(w)[None, None, :]).astype(jnp.int32)
+    d_r_at = jnp.einsum("bgw,bw->bg", onehot, best_r)
+    ok_r_at = jnp.einsum("bgw,bw->bg", onehot, ok_r.astype(jnp.int32)) > 0
+    consistent = jnp.abs(best_l - d_r_at) <= lr_threshold
+
+    margin_ok = us >= (disp_min + 2)
+    valid = ok_l & ok_r_at & consistent & margin_ok[None, :]
+    return jnp.where(valid, best_l.astype(jnp.float32), INVALID)
+
+
+# --------------------------------------------------------------------------
+# dense_match kernel oracle
+# --------------------------------------------------------------------------
+def _prior_energy(mu: jax.Array, num_disp: int, gamma: float, sigma: float) -> jax.Array:
+    """-log(gamma + exp(-(d-mu)^2 / 2 sigma^2)) for all d: (bh, D, W)."""
+    d = jnp.arange(num_disp, dtype=jnp.float32)[None, :, None]
+    diff = d - mu[:, None, :]
+    return -jnp.log(gamma + jnp.exp(-(diff * diff) / (2.0 * sigma * sigma)))
+
+
+def _candidate_mask(cands: jax.Array, num_disp: int) -> jax.Array:
+    """cands: (bh, W, C) int32 -> mask (bh, D, W) bool (d in candidate set)."""
+    d = jnp.arange(num_disp)[None, :, None, None]                # (1, D, 1, 1)
+    c = cands[:, None, :, :]                                     # (bh, 1, W, C)
+    return jnp.any(d == c, axis=-1)                              # (bh, D, W)
+
+
+def dense_match_rows_ref(
+    desc_l: jax.Array,          # (bh, W, 16) int8
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    mu_l: jax.Array,            # (bh, W) float32
+    mu_r: jax.Array,            # (bh, W) float32
+    cand_l: jax.Array,          # (bh, W, C) int32 candidate disparities
+    cand_r: jax.Array,          # (bh, W, C) int32
+    *,
+    num_disp: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense left AND right disparity rows from ONE cost volume.
+
+    Returns (disp_l, disp_r) each (bh, W) float32 with INVALID sentinels.
+    The candidate set restriction is a mask over the D axis (compare +
+    reduce), not a gather.
+    """
+    cv = cost_volume_rows(desc_l, desc_r, num_disp)              # (bh, D, W)
+    cv_r = diagonal_volume(cv)
+
+    def one_view(cv_v, mu, cands, tex):
+        mask = _candidate_mask(cands, num_disp)
+        e = beta * cv_v.astype(jnp.float32) + _prior_energy(
+            mu, num_disp, gamma, sigma
+        )
+        e = jnp.where(mask & (cv_v < BIG), e, BIGF)
+        best = jnp.argmin(e, axis=1).astype(jnp.float32)         # (bh, W)
+        emin = jnp.min(e, axis=1)
+        valid = (emin < BIGF) & (tex >= match_texture)
+        return jnp.where(valid, best, INVALID)
+
+    disp_l = one_view(cv, mu_l, cand_l, _texture_rows(desc_l))
+    disp_r = one_view(cv_r, mu_r, cand_r, _texture_rows(desc_r))
+    return disp_l, disp_r
+
+
+# --------------------------------------------------------------------------
+# median kernel oracle
+# --------------------------------------------------------------------------
+def median3x3_rows_ref(top: jax.Array, mid: jax.Array, bot: jax.Array) -> jax.Array:
+    """3x3 valid-aware median for a row block given 3 row-shifted views.
+
+    top/mid/bot: (bh, W+2) float32 views of the edge-padded map.
+    Invalid (-1) neighbours are replaced by the centre value.
+    """
+    w = top.shape[1] - 2
+    centre = mid[:, 1 : w + 1]
+    wins = []
+    for view in (top, mid, bot):
+        for dx in range(3):
+            wins.append(view[:, dx : dx + w])
+    win = jnp.stack(wins, axis=-1)                               # (bh, W, 9)
+    win = jnp.where(win == INVALID, centre[..., None], win)
+    med = jnp.sort(win, axis=-1)[..., 4]
+    return jnp.where(centre == INVALID, INVALID, med)
+
+
+# --------------------------------------------------------------------------
+# flash_attention kernel oracle
+# --------------------------------------------------------------------------
+def flash_attention_ref(
+    q: jax.Array,             # (B, H, Sq, D)
+    k: jax.Array,             # (B, H, Skv, D)
+    v: jax.Array,             # (B, H, Skv, D)
+    causal: bool = True,
+) -> jax.Array:
+    """Plain softmax attention -- the oracle the flash kernel must match."""
+    d = q.shape[-1]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d ** 0.5)
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

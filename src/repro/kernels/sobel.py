@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused 3x3 Sobel (du + dv) over row blocks.
+
+Mirrors the paper's descriptor extractor (Fig. 5): a line-buffer systolic
+structure on FPGA becomes, on TPU, a row-blocked VMEM pipeline.  The 2-row
+halo of the 3x3 stencil is provided as three row-shifted VIEWS of the
+edge-padded image, so every BlockSpec is a plain non-overlapping tile and
+Pallas' automatic HBM->VMEM double buffering (the TPU's "ping-pong BRAM")
+applies unchanged.
+
+Outputs are int8 (the paper's 8-bit intermediate storage trait: the 16 x
+8-bit descriptor is never materialised in HBM; consumers re-assemble it in
+VMEM -- ~8x memory-traffic saving, Sec. III-C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def _sobel_kernel(top_ref, mid_ref, bot_ref, gx_ref, gy_ref):
+    gx, gy = ref.sobel_rows_ref(top_ref[...], mid_ref[...], bot_ref[...])
+    gx_ref[...] = gx
+    gy_ref[...] = gy
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sobel_pallas(
+    image: jax.Array, *, block_rows: int = 8, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """(H, W) image -> (gx, gy) int8 via a row-blocked Pallas kernel."""
+    h, w = image.shape
+    img = image.astype(jnp.int32)
+    padded = jnp.pad(img, 1, mode="edge")                 # (H+2, W+2)
+    top = padded[0:h, :]
+    mid = padded[1 : h + 1, :]
+    bot = padded[2 : h + 2, :]
+
+    bh = min(block_rows, h)
+    grid = (pl.cdiv(h, bh),)
+    row_spec = pl.BlockSpec((bh, w + 2), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((bh, w), lambda i: (i, 0))
+
+    gx, gy = pl.pallas_call(
+        _sobel_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), jnp.int8),
+            jax.ShapeDtypeStruct((h, w), jnp.int8),
+        ],
+        interpret=interpret,
+    )(top, mid, bot)
+    return gx, gy

@@ -1,0 +1,87 @@
+"""Serving launchers: LM generation and the iELAS stereo service.
+
+  PYTHONPATH=src python -m repro.launch.serve lm --arch yi-9b --reduced \\
+      --requests 4 --prompt-len 16 --max-new 24
+  PYTHONPATH=src python -m repro.launch.serve stereo --frames 8 --height 120 \\
+      --width 160
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.elas_stereo import SYNTH
+from repro.data.stereo import synthetic_stereo_pair
+from repro.models.model import LMModel
+from repro.serving.engine import ServeEngine
+from repro.serving.stereo_service import StereoService
+
+
+def serve_lm(args) -> int:
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch} has a stub frontend; LM serving demo "
+                         "uses token archs")
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch=args.batch,
+                         max_len=args.prompt_len + args.max_new + 1)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=rng.integers(4, args.prompt_len + 1))
+        for _ in range(args.requests)
+    ]
+    t0 = time.monotonic()
+    outs = engine.generate(prompts, max_new_tokens=args.max_new)
+    dt = time.monotonic() - t0
+    tokens = sum(len(o) for o in outs)
+    print(f"{args.requests} requests, {tokens} tokens in {dt:.2f}s "
+          f"({tokens/dt:.1f} tok/s)")
+    for i, o in enumerate(outs[:4]):
+        print(f"  req{i}: {o[:12]}{'...' if len(o) > 12 else ''}")
+    return 0
+
+
+def serve_stereo(args) -> int:
+    p = SYNTH.params
+    svc = StereoService(p, depth=2).start()
+    frames = (
+        synthetic_stereo_pair(height=args.height, width=args.width,
+                              d_max=40, seed=s)[:2]
+        for s in range(args.frames)
+    )
+    results, wall = svc.run_stream(frames, args.frames)
+    svc.stop()
+    fps = args.frames / wall
+    print(f"{args.frames} frames in {wall:.2f}s -> {fps:.1f} fps "
+          f"({args.height}x{args.width}, CPU backend)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    lm = sub.add_parser("lm")
+    lm.add_argument("--arch", choices=ARCH_IDS, default="yi-9b")
+    lm.add_argument("--reduced", action="store_true", default=True)
+    lm.add_argument("--requests", type=int, default=4)
+    lm.add_argument("--batch", type=int, default=2)
+    lm.add_argument("--prompt-len", type=int, default=16)
+    lm.add_argument("--max-new", type=int, default=16)
+
+    st = sub.add_parser("stereo")
+    st.add_argument("--frames", type=int, default=8)
+    st.add_argument("--height", type=int, default=120)
+    st.add_argument("--width", type=int, default=160)
+
+    args = ap.parse_args(argv)
+    return serve_lm(args) if args.mode == "lm" else serve_stereo(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

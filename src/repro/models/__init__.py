@@ -1,0 +1,4 @@
+"""LM-family model zoo: dense GQA, gemma2-style, MLA+MoE, xLSTM, Mamba hybrid,
+and stub-fronted VLM/audio backbones -- all as one composable LMModel."""
+from repro.models.config import ModelConfig, MoeConfig, MambaConfig, LayerKind  # noqa: F401
+from repro.models.model import LMModel  # noqa: F401

@@ -1,0 +1,369 @@
+"""Attention: GQA with RoPE/M-RoPE, gemma2 softcap + sliding window, KV cache.
+
+Full-sequence paths (training / prefill) use BLOCKWISE attention -- a
+flash-attention-style online-softmax double scan over query and KV chunks in
+pure JAX (lax.scan), so the (S x S) score matrix is never materialised.
+This is what makes prefill_32k and train_4k memory-feasible without a
+custom kernel; chunk sizes are config knobs (cfg.q_chunk / cfg.kv_chunk).
+
+TP note: KV heads are logically EXPANDED to the full head count before the
+score einsums (jnp.repeat on the head axis).  The cache stays in compact
+KV-head form (replicated across the model axis -- it is small, that is
+GQA's point), while the expanded K/V inherit the q-heads sharding, so
+tensor parallelism works even when kv_heads < tp_degree (yi kv=4,
+mistral kv=8 on a 16-way model axis).  Per shard only H/tp expanded heads
+materialise.
+
+Decode (Sq == 1 against a cache) takes the direct path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import LayerKind, ModelConfig
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array          # (B, Smax, KV, D)
+    v: jax.Array          # (B, Smax, KV, D)
+    index: jax.Array      # () int32 -- number of valid positions
+
+
+def init_attn_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    params = {
+        "wq": common.dense_init(kq, (d, h, hd)),
+        "wk": common.dense_init(kk, (d, kvh, hd)),
+        "wv": common.dense_init(kv, (d, kvh, hd)),
+        "wo": common.dense_init(ko, (h, hd, d)),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h, hd), jnp.float32)
+        params["bk"] = jnp.zeros((kvh, hd), jnp.float32)
+        params["bv"] = jnp.zeros((kvh, hd), jnp.float32)
+    return params
+
+
+def attn_param_specs(cfg: ModelConfig) -> dict:
+    """Logical axes per param leaf (resolved by the sharding rules).
+
+    The FSDP axis rides on d_model (a non-TP dim), so ZeRO-3 and TP compose.
+    """
+    specs = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ("heads", None)
+        specs["bk"] = ("kv_heads", None)
+        specs["bv"] = ("kv_heads", None)
+    return specs
+
+
+def _project_qkv(params: dict, x: jax.Array, cfg: ModelConfig):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    return q, k, v
+
+
+def _apply_pos(q, k, positions, cfg: ModelConfig):
+    if cfg.pos_embedding == "rope":
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.pos_embedding == "mrope":
+        assert positions.ndim == 3, "mrope needs (B, S, 3) positions"
+        q = common.apply_mrope(q, positions, cfg.rope_theta)
+        k = common.apply_mrope(k, positions, cfg.rope_theta)
+    # sinusoidal/none: applied at the embedding, nothing per-layer.
+    return q, k
+
+
+def _expand_kv(k: jax.Array, num_heads: int, from_cache: bool = False) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D): logical repeat; physically each TP
+    shard materialises only its own H/tp heads (GSPMD broadcast+reshape).
+
+    from_cache=True keeps the CACHE's layout: sequence stays on "seq_kv"
+    and the expanded head axis keeps the "kv_heads" rule -- jnp.repeat
+    expands each kv head into a CONTIGUOUS block of q heads, so a kv-head
+    shard owns exactly its own expanded heads (no data movement).
+    Re-annotating a seq-sharded cache as q-head-sharded instead forces
+    GSPMD into a full gather per layer (2+ GB/layer at 500k context -- the
+    dominant decode collective before this fix, EXPERIMENTS.md §Perf #3;
+    and the "kv_heads" preservation is what fixes the gemma2 regression
+    found in §Perf #5)."""
+    kvh = k.shape[2]
+    if kvh == num_heads:
+        return k
+    k = jnp.repeat(k, num_heads // kvh, axis=2)
+    if from_cache:
+        return common.with_logical(k, "batch", "seq_kv", "kv_heads", None)
+    return common.with_logical(k, "batch", "seq", "heads", None)
+
+
+def cache_insert(buf: jax.Array, new: jax.Array, idx, mode: str) -> jax.Array:
+    """Insert ``new`` (B, S_new, ...) into ``buf`` (B, S, ...) at ``idx``.
+
+    mode="dus": dynamic_update_slice -- minimal write, but on a SEQ-SHARDED
+    cache GSPMD falls back to 'involuntary full rematerialization' (a full
+    all-gather + reshard per layer -- the dominant collective in the decode
+    baselines).
+    mode="onehot": where(iota == idx) masked select -- elementwise, so the
+    cache's sharding is preserved exactly (no collective at all) at the
+    price of a full cache write; the cache is being read by attention in
+    the same step anyway, so on TPU this rides the same HBM sweep.
+    S_new must be 1 in onehot mode (decode).
+    """
+    if mode == "dus" or new.shape[1] > 1:
+        start = (0, idx) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    s = buf.shape[1]
+    sel = jnp.arange(s) == idx
+    sel = sel.reshape((1, s) + (1,) * (buf.ndim - 2))
+    return jnp.where(sel, new.astype(buf.dtype), buf)
+
+
+def _mask_bias(
+    q_pos: jax.Array,      # (Sq,) absolute positions
+    kv_pos: jax.Array,     # (Skv,)
+    window: int,           # 0 = global
+) -> jax.Array:
+    """(Sq, Skv) additive mask: causal + optional sliding window."""
+    ok = kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_chunk(q, k, v, bias, scale, attn_softcap):
+    """q: (B, cq, H, D); k/v: (B, ck, H, D); bias: (cq, ck).
+
+    Returns (out (B, cq, H, D) unnormalised, m (B,H,cq), l (B,H,cq)).
+    """
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    scores = common.softcap(scores, attn_softcap)
+    scores = scores + bias[None, None, :, :]
+    m = jnp.max(scores, axis=-1)                              # (B,H,cq)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return out, m, l
+
+
+def blockwise_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Skv, KV, D)
+    v: jax.Array,          # (B, Skv, KV, D)
+    *,
+    q_offset: int | jax.Array = 0,   # absolute position of q[0]
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Online-softmax blockwise attention. Returns (B, Sq, H, D).
+
+    causal_skip=True iterates KV blocks with a dynamic fori_loop bound of
+    iq+1 (and a window-derived lower bound for local attention) instead of
+    scanning all nk blocks -- fully-masked blocks are never computed, which
+    halves causal-attention FLOPs (perf hillclimb #2, EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / (d ** 0.5)
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    assert sq % cq == 0 and skv % ck == 0, "seq not divisible by chunk"
+    nq, nk = sq // cq, skv // ck
+
+    q_chunks = q.reshape(b, nq, cq, h, d).transpose(1, 0, 2, 3, 4)
+    k_chunks = k.reshape(b, nk, ck, h, d).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(b, nk, ck, h, d).transpose(1, 0, 2, 3, 4)
+
+    def per_q_chunk(iq, q_c):
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_body(jk, k_c, v_c, carry):
+            acc, m, l = carry
+            kv_pos = jk * ck + jnp.arange(ck)
+            bias = _mask_bias(q_pos, kv_pos, window)
+            o_c, m_c, l_c = _sdpa_chunk(q_c, k_c, v_c, bias, scale, attn_softcap)
+            m_new = jnp.maximum(m, m_c)
+            r_old = jnp.exp(m - m_new)
+            r_new = jnp.exp(m_c - m_new)
+            # acc is (B, cq, H, D); m/l are (B, H, cq)
+            acc = acc * r_old.transpose(0, 2, 1)[..., None] + \
+                o_c * r_new.transpose(0, 2, 1)[..., None]
+            l = l * r_old + l_c * r_new
+            return acc, m_new, l
+
+        acc0 = jnp.zeros((b, cq, h, d), jnp.float32)
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+
+        def scan_body(carry, inputs):
+            jk, k_c, v_c = inputs
+            return kv_body(jk, k_c, v_c, carry), None
+
+        if causal_skip and isinstance(iq, int):
+            # STATIC per-q-chunk bounds (differentiable path, used when the
+            # caller unrolls q chunks): scan exactly the visible KV blocks.
+            hi = min((q_offset + (iq + 1) * cq - 1) // ck + 1, nk)
+            lo = max(0, (q_offset + iq * cq - window + 1) // ck) \
+                if window > 0 else 0
+            (acc, m, l), _ = jax.lax.scan(
+                scan_body, (acc0, m0, l0),
+                (jnp.arange(lo, hi), k_chunks[lo:hi], v_chunks[lo:hi]),
+            )
+        elif causal_skip:
+            # dynamic bounds (traced iq / q_offset): fori_loop -- forward
+            # only (serving paths; reverse-mode AD rejects dynamic bounds).
+            hi = jnp.minimum((q_offset + (iq + 1) * cq - 1) // ck + 1, nk)
+            lo = jnp.maximum(0, (q_offset + iq * cq - window + 1) // ck) \
+                if window > 0 else 0
+
+            def fori_body(jk, carry):
+                return kv_body(jk, k_chunks[jk], v_chunks[jk], carry)
+
+            acc, m, l = jax.lax.fori_loop(lo, hi, fori_body, (acc0, m0, l0))
+        else:
+            (acc, m, l), _ = jax.lax.scan(
+                scan_body, (acc0, m0, l0),
+                (jnp.arange(nk), k_chunks, v_chunks),
+            )
+        denom = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return acc / denom
+
+    if causal_skip and isinstance(q_offset, int):
+        # unrolled q chunks -> static bounds -> differentiable causal skip.
+        # HLO grows by ~nq attention bodies; nq is small (seq/q_chunk).
+        outs = [per_q_chunk(iq, q_chunks[iq]) for iq in range(nq)]
+        out = jnp.stack(outs, axis=0)                     # (nq, B, cq, H, D)
+    else:
+        out = jax.lax.map(
+            lambda args: per_q_chunk(*args), (jnp.arange(nq), q_chunks)
+        )                                                 # (nq, B, cq, H, D)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, D)
+    cache_k: jax.Array,    # (B, Smax, KV, D)
+    cache_v: jax.Array,
+    index: jax.Array,      # () valid length AFTER inserting current token
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    smax = cache_k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    k = _expand_kv(cache_k, h, from_cache=True)
+    v = _expand_kv(cache_v, h, from_cache=True)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    scores = common.softcap(scores, attn_softcap)
+    kv_pos = jnp.arange(smax)
+    ok = kv_pos[None, :] < index
+    if window > 0:
+        ok &= kv_pos[None, :] > (index - 1 - window)
+    scores = jnp.where(ok[None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_block(
+    params: dict,
+    x: jax.Array,              # (B, S, D)
+    positions: jax.Array,      # (B, S) or (B, S, 3)
+    cfg: ModelConfig,
+    kind: LayerKind,
+    cache: Optional[KVCache] = None,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention with optional cache. Returns (out, updated_cache)."""
+    window = cfg.sliding_window if kind == LayerKind.ATTN_LOCAL else 0
+    q, k, v = _project_qkv(params, x, cfg)
+    q = common.with_logical(q, "batch", "seq", "heads", None)
+    k = common.with_logical(k, "batch", "seq", "kv_heads", None)
+    q, k = _apply_pos(q, k, positions, cfg)
+
+    if cache is None:
+        out = blockwise_attention(
+            q, k, v,
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            causal_skip=cfg.causal_skip,
+        )
+        new_cache = None
+    elif q.shape[1] == 1:
+        # decode: insert token at cache.index, attend over the cache.
+        idx = cache.index
+        ck = cache_insert(cache.k, k, idx, cfg.cache_update)
+        cv = cache_insert(cache.v, v, idx, cfg.cache_update)
+        out = decode_attention(
+            q, ck, cv, idx + 1, window=window, attn_softcap=cfg.attn_softcap
+        )
+        new_cache = KVCache(k=ck, v=cv, index=idx + 1)
+    else:
+        # prefill into an empty cache.
+        s = q.shape[1]
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.index, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.index, 0, 0)
+        )
+        out = blockwise_attention(
+            q, k, v,
+            q_offset=cache.index,
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            causal_skip=cfg.causal_skip,
+        )
+        new_cache = KVCache(k=ck, v=cv, index=cache.index + s)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+    out = common.with_logical(out, "batch", "seq", None)
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "index"], meta_fields=[]
+)

@@ -1,0 +1,119 @@
+"""Shared model primitives: norms, rotary embeddings, softcap, initialisers,
+and the logical-axis sharding constraint helper."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# logical-axis activation sharding
+# --------------------------------------------------------------------------
+def with_logical(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Attach a logical sharding hint; resolved by distributed.sharding rules.
+
+    Inside jit under a mesh this becomes with_sharding_constraint; outside a
+    mesh context it is a no-op, so models run unmodified on a single device.
+    """
+    from repro.distributed.sharding import logical_constraint
+
+    return logical_constraint(x, logical_axes)
+
+
+# --------------------------------------------------------------------------
+# norms / activations
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,              # (B, S, H, D)
+    positions: jax.Array,      # (B, S) int32
+    theta: float,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,              # (B, S, H, D)
+    positions: jax.Array,      # (B, S, 3) int32: (temporal, height, width)
+    theta: float,
+    sections: tuple[int, int, int] = (1, 1, 2),
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head dim is split into 3 sections,
+    each rotated by its own position stream (t/h/w).  Section sizes are in
+    proportions of head_dim//2 (t:h:w = 1:1:2 by default)."""
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    parts = []
+    start = 0
+    for i, size in enumerate(sizes):
+        pos_i = positions[..., i]                            # (B, S)
+        ang = pos_i[..., None].astype(jnp.float32) * freqs[start : start + size]
+        parts.append(ang)
+        start += size
+    angles = jnp.concatenate(parts, axis=-1)                 # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, d_model: int) -> jax.Array:
+    """(B, S) -> (B, S, d_model) classic transformer sinusoids (musicgen)."""
+    half = d_model // 2
+    freqs = jnp.exp(
+        -np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# initialisers
+# --------------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init, stored in float32 (cast at use)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32)

@@ -1,0 +1,203 @@
+"""Mamba-1 SSM block (jamba's sequence mixer).
+
+Training/prefill runs a CHUNKED selective scan: lax.scan over sequence
+chunks carrying the SSM state, with a parallel associative scan inside each
+chunk -- the discretised (A_bar, B_bar x) tensors are materialised per chunk
+only, bounding memory at (B, chunk, d_inner, d_state) while keeping
+parallelism.  Decode is the O(1) recurrent step over carried
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+MAMBA_CHUNK = 256
+
+
+@dataclasses.dataclass
+class MambaState:
+    conv: jax.Array       # (B, d_conv-1, d_inner) -- last inputs for the conv
+    ssm: jax.Array        # (B, d_inner, d_state)
+    index: jax.Array      # ()
+
+
+jax.tree_util.register_dataclass(
+    MambaState, data_fields=["conv", "ssm", "index"], meta_fields=[]
+)
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, (cfg.d_model + 15) // 16)
+
+
+def init_mamba_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dtr = _dt_rank(cfg)
+    keys = jax.random.split(key, 7)
+    # S4D-real initialisation for A; dt bias for stable softplus(dt).
+    a_init = jnp.tile(
+        jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :], (d_in, 1)
+    )
+    return {
+        "w_in": common.dense_init(keys[0], (d, 2 * d_in)),
+        "conv_w": 0.1 * jax.random.normal(keys[1], (mc.d_conv, d_in), jnp.float32),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "w_x": common.dense_init(keys[2], (d_in, dtr + 2 * mc.d_state)),
+        "w_dt": common.dense_init(keys[3], (dtr, d_in)),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((d_in,), jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": common.dense_init(keys[4], (d_in, d)),
+    }
+
+
+def mamba_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "w_in": ("fsdp", "conv_dim"),
+        "conv_w": (None, "conv_dim"),
+        "conv_b": ("conv_dim",),
+        "w_x": ("conv_dim", None),   # (d_in, dt_rank+2N): odd width, replicate
+        "w_dt": (None, "conv_dim"),
+        "dt_bias": ("conv_dim",),
+        "a_log": ("conv_dim", "state"),
+        "d_skip": ("conv_dim",),
+        "w_out": ("conv_dim", "fsdp"),
+    }
+
+
+def _ssm_inputs(params: dict, xc: jax.Array, cfg: ModelConfig):
+    """xc (B, S, d_in) post-conv -> discretised (a_bar, bx, c) tensors."""
+    mc = cfg.mamba
+    dtr = _dt_rank(cfg)
+    dtype = xc.dtype
+    proj = jnp.einsum("bsd,de->bse", xc, params["w_x"].astype(dtype))
+    dt_r, b_mat, c_mat = jnp.split(proj, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_r, params["w_dt"].astype(dtype))
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                   # (B, S, d_in)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (d_in, N)
+    a_bar = jnp.exp(dt[..., None] * a)                  # (B, S, d_in, N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_mat.astype(jnp.float32)[
+        :, :, None, :
+    ]                                                   # (B, S, d_in, N)
+    return a_bar, bx, c_mat.astype(jnp.float32)
+
+
+def _chunk_scan(a_bar, bx, h0):
+    """Associative scan within a chunk given incoming state h0.
+
+    a_bar/bx: (B, C, d_in, N); h0: (B, d_in, N).  Returns (h_all, h_last).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    # fold h0 into the first element
+    bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+    a_all, h_all = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def _selective_scan(a_bar, bx, c_mat, h0, chunk: int):
+    """Chunked scan over the full sequence. Returns (y (B,S,d_in), h_last)."""
+    b, s, d_in, n = a_bar.shape
+    ck = min(chunk, s)
+    assert s % ck == 0, "mamba: seq not divisible by chunk"
+    nc = s // ck
+    a_c = a_bar.reshape(b, nc, ck, d_in, n).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(b, nc, ck, d_in, n).transpose(1, 0, 2, 3, 4)
+    c_c = c_mat.reshape(b, nc, ck, n).transpose(1, 0, 2, 3)
+
+    def step(h, inputs):
+        a_i, b_i, c_i = inputs
+        h_all, h_last = _chunk_scan(a_i, b_i, h)
+        y_i = jnp.einsum("bcdn,bcn->bcd", h_all, c_i)
+        return h_last, y_i
+
+    h_last, y = jax.lax.scan(step, h0, (a_c, b_c, c_c))
+    y = y.transpose(1, 0, 2, 3).reshape(b, s, d_in)
+    return y, h_last
+
+
+def mamba_block(
+    params: dict,
+    x: jax.Array,              # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[MambaState] = None,
+) -> tuple[jax.Array, Optional[MambaState]]:
+    mc = cfg.mamba
+    dtype = x.dtype
+    b, s, d = x.shape
+    d_in = mc.expand * d
+
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dtype))
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc = common.with_logical(xc, "batch", "seq", "conv_dim")
+
+    if state is not None and s == 1:
+        # ---- decode step ----
+        conv_win = jnp.concatenate([state.conv, xc], axis=1)  # (B, d_conv, d_in)
+        new_conv = conv_win[:, 1:]
+        xconv = jnp.einsum(
+            "bkd,kd->bd", conv_win.astype(jnp.float32),
+            params["conv_w"].astype(jnp.float32),
+        ) + params["conv_b"].astype(jnp.float32)
+        xconv = jax.nn.silu(xconv)[:, None, :].astype(dtype)  # (B, 1, d_in)
+        a_bar, bx, c_mat = _ssm_inputs(params, xconv, cfg)
+        h = a_bar[:, 0] * state.ssm + bx[:, 0]                # (B, d_in, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+        new_state = MambaState(conv=new_conv, ssm=h, index=state.index + 1)
+        xconv_f32 = xconv.astype(jnp.float32)
+    else:
+        # ---- train / prefill: causal depthwise conv + chunked scan ----
+        pad = jnp.zeros((b, mc.d_conv - 1, d_in), dtype)
+        xp = jnp.concatenate([pad, xc], axis=1)
+        xconv = jnp.zeros((b, s, d_in), jnp.float32)
+        for i in range(mc.d_conv):
+            xconv = xconv + (
+                xp[:, i : i + s].astype(jnp.float32)
+                * params["conv_w"][i].astype(jnp.float32)
+            )
+        xconv = jax.nn.silu(xconv + params["conv_b"].astype(jnp.float32))
+        xconv = xconv.astype(dtype)
+        a_bar, bx, c_mat = _ssm_inputs(params, xconv, cfg)
+        h0 = (
+            state.ssm.astype(jnp.float32)
+            if state is not None
+            else jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+        )
+        y, h_last = _selective_scan(a_bar, bx, c_mat, h0, MAMBA_CHUNK)
+        if state is not None:
+            new_conv = xc[:, -(mc.d_conv - 1) :].astype(state.conv.dtype)
+            new_state = MambaState(
+                conv=new_conv, ssm=h_last, index=state.index + s
+            )
+        else:
+            new_state = None
+        xconv_f32 = xconv.astype(jnp.float32)
+
+    y = y + xconv_f32 * params["d_skip"].astype(jnp.float32)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dtype))
+    return common.with_logical(out, "batch", "seq", None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return MambaState(
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, d_in, mc.d_state), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,177 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV states are compressed into a rank-``kv_lora_rank`` latent c_KV plus a
+shared decoupled RoPE key k_R; the decode cache stores ONLY
+(c_KV, k_R) -- (512 + 64) floats/token instead of 2*H*D -- which is the
+technique's memory win.  Queries optionally go through their own low-rank
+bottleneck (q_lora_rank, used by the 236B config).
+
+Cache layout: c_kv (B, Smax, R), k_rope (B, Smax, Dr) -- note NO head axis:
+the latent is shared across heads (that is the compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.attention import NEG_INF, blockwise_attention
+from repro.models.config import ModelConfig
+
+# NOTE on sharding: heads shard over `model`; the latent cache is
+# head-free so it replicates over `model` and shards over `batch` only.
+
+
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array       # (B, Smax, R)
+    k_rope: jax.Array     # (B, Smax, Dr)
+    index: jax.Array      # ()
+
+
+jax.tree_util.register_dataclass(
+    MLACache, data_fields=["c_kv", "k_rope", "index"], meta_fields=[]
+)
+
+
+def init_mla_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    mla = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = mla.kv_lora_rank, mla.nope_head_dim, mla.rope_head_dim, mla.v_head_dim
+    keys = jax.random.split(key, 8)
+    params = {
+        # KV compression and per-head expansions
+        "w_dkv": common.dense_init(keys[0], (d, r)),           # down: d -> R
+        "w_kr": common.dense_init(keys[1], (d, dr)),           # shared rope key
+        "w_uk": common.dense_init(keys[2], (r, h, dn), in_axis=0),
+        "w_uv": common.dense_init(keys[3], (r, h, dv), in_axis=0),
+        "w_o": common.dense_init(keys[4], (h, dv, d), in_axis=0),
+    }
+    if mla.q_lora_rank > 0:
+        params["w_dq"] = common.dense_init(keys[5], (d, mla.q_lora_rank))
+        params["w_uq"] = common.dense_init(
+            keys[6], (mla.q_lora_rank, h, dn + dr), in_axis=0
+        )
+    else:
+        params["w_q"] = common.dense_init(keys[7], (d, h, dn + dr))
+    return params
+
+
+def mla_param_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "w_dkv": ("fsdp", None),
+        "w_kr": ("fsdp", None),
+        "w_uk": ("fsdp", "heads", None),
+        "w_uv": ("fsdp", "heads", None),
+        "w_o": ("heads", None, "fsdp"),
+    }
+    if cfg.mla.q_lora_rank > 0:
+        specs["w_dq"] = ("fsdp", None)
+        specs["w_uq"] = ("fsdp", "heads", None)
+    else:
+        specs["w_q"] = ("fsdp", "heads", None)
+    return specs
+
+
+def _queries(params: dict, x: jax.Array, cfg: ModelConfig):
+    mla = cfg.mla
+    dtype = x.dtype
+    if mla.q_lora_rank > 0:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dtype))
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(dtype))
+    q_nope = q[..., : mla.nope_head_dim]
+    q_rope = q[..., mla.nope_head_dim :]
+    return q_nope, q_rope
+
+
+def mla_block(
+    params: dict,
+    x: jax.Array,              # (B, S, D)
+    positions: jax.Array,      # (B, S)
+    cfg: ModelConfig,
+    cache: Optional[MLACache] = None,
+) -> tuple[jax.Array, Optional[MLACache]]:
+    mla = cfg.mla
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    pos = positions if positions.ndim == 2 else positions[..., 0]
+
+    q_nope, q_rope = _queries(params, x, cfg)
+    q_rope = common.apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dtype))
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_kr"].astype(dtype))
+    k_rope = common.apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        from repro.models.attention import cache_insert
+
+        c_kv_full = cache_insert(cache.c_kv, c_kv, cache.index, cfg.cache_update)
+        k_rope_full = cache_insert(
+            cache.k_rope, k_rope, cache.index, cfg.cache_update
+        )
+        new_index = cache.index + s
+        new_cache = MLACache(c_kv=c_kv_full, k_rope=k_rope_full, index=new_index)
+    else:
+        c_kv_full, k_rope_full = c_kv, k_rope
+        new_index, new_cache = None, None
+
+    if cache is not None and s == 1:
+        # ---- decode: absorbed-matmul form (q projected into latent space),
+        # attending over the compressed cache directly. ----
+        # score = q_nope^T W_uk c + q_rope^T k_rope
+        q_lat = jnp.einsum(
+            "bshk,rhk->bshr", q_nope, params["w_uk"].astype(dtype)
+        )                                                     # (B,1,H,R)
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv_full.astype(dtype))
+        s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope_full.astype(dtype))
+        scale = 1.0 / ((mla.nope_head_dim + mla.rope_head_dim) ** 0.5)
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale
+        kv_pos = jnp.arange(c_kv_full.shape[1])
+        ok = kv_pos[None, :] < new_index
+        scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        # readout in latent space, then expand through W_uv.
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", p.astype(dtype), c_kv_full.astype(dtype))
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, params["w_uv"].astype(dtype))
+    else:
+        # ---- train / prefill: expand K,V per head, blockwise attention ----
+        k_nope = jnp.einsum(
+            "bsr,rhk->bshk", c_kv_full.astype(dtype), params["w_uk"].astype(dtype)
+        )
+        v = jnp.einsum(
+            "bsr,rhv->bshv", c_kv_full.astype(dtype), params["w_uv"].astype(dtype)
+        )
+        k_r = jnp.broadcast_to(
+            k_rope_full[:, :, None, :].astype(dtype),
+            (*k_rope_full.shape[:2], h, mla.rope_head_dim),
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_r], axis=-1)
+        # pad V up to the packed head dim so one attention call serves both.
+        dk = mla.nope_head_dim + mla.rope_head_dim
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dk - mla.v_head_dim)))
+        out = blockwise_attention(
+            q_full, k_full, v_pad,
+            q_offset=cache.index if cache is not None else 0,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            causal_skip=cfg.causal_skip,
+        )[..., : mla.v_head_dim]
+
+    y = jnp.einsum("bshv,hvd->bsd", out, params["w_o"].astype(dtype))
+    return common.with_logical(y, "batch", "seq", None), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> MLACache:
+    mla = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, mla.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, mla.rope_head_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )

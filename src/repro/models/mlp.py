@@ -1,0 +1,47 @@
+"""Dense MLP variants: SwiGLU (llama-family), GeGLU (gemma2), plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def init_mlp_params(key: jax.Array, d_model: int, d_ff: int, act: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "gelu_mlp":                      # plain 2-layer MLP (musicgen)
+        return {
+            "w_in": common.dense_init(k1, (d_model, d_ff)),
+            "w_out": common.dense_init(k2, (d_ff, d_model)),
+        }
+    return {                                   # gated: SwiGLU / GeGLU
+        "w_gate": common.dense_init(k1, (d_model, d_ff)),
+        "w_up": common.dense_init(k2, (d_model, d_ff)),
+        "w_down": common.dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp_param_specs(act: str) -> dict:
+    if act == "gelu_mlp":
+        return {"w_in": ("fsdp", "ffn"), "w_out": ("ffn", "fsdp")}
+    return {
+        "w_gate": ("fsdp", "ffn"),
+        "w_up": ("fsdp", "ffn"),
+        "w_down": ("ffn", "fsdp"),
+    }
+
+
+def mlp_block(params: dict, x: jax.Array, act: str) -> jax.Array:
+    dtype = x.dtype
+    if act == "gelu_mlp":
+        h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dtype))
+        h = jax.nn.gelu(h)
+        h = common.with_logical(h, "batch", "seq", "ffn")
+        return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dtype))
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+    act_fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = act_fn(gate) * up
+    h = common.with_logical(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dtype))

@@ -1,0 +1,514 @@
+"""LMModel: one composable decoder covering all assigned architectures.
+
+Layers follow cfg.prefix + cfg.pattern_unit * num_units.  The repeated
+units are SCANNED (params stacked on a leading ``units`` axis), which keeps
+the lowered HLO size independent of depth -- essential for compiling
+88-layer configs in the multi-pod dry-run -- and lets remat wrap exactly
+one unit.
+
+Blocks by LayerKind:
+  ATTN / ATTN_LOCAL : RMSNorm -> GQA attention -> residual; RMSNorm -> MLP
+                      (or MoE) -> residual.  gemma2 post-norms optional.
+  MLA               : same with multi-head latent attention.
+  MAMBA             : RMSNorm -> Mamba mixer -> residual.
+  MLSTM / SLSTM     : RMSNorm -> xLSTM block -> residual.
+
+``inputs`` are token ids (B, S) int32, or pre-computed frontend embeddings
+(B, S, d_model) for the [vlm]/[audio] stub frontends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mamba, mla, moe as moe_mod, xlstm
+from repro.models.config import LayerKind, ModelConfig
+from repro.models.mlp import init_mlp_params, mlp_block, mlp_param_specs
+
+Params = Any
+Caches = Any
+
+_ATTN_KINDS = (LayerKind.ATTN, LayerKind.ATTN_LOCAL, LayerKind.MLA)
+
+
+# --------------------------------------------------------------------------
+# per-layer init / specs
+# --------------------------------------------------------------------------
+def _layer_is_moe(cfg: ModelConfig, layer_idx: int) -> bool:
+    if cfg.moe is None:
+        return False
+    if layer_idx < cfg.moe.first_dense:
+        return False
+    return ((layer_idx - cfg.moe.first_dense) % cfg.moe.every) == cfg.moe.offset
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, kind: LayerKind, layer_idx: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    if kind in _ATTN_KINDS:
+        p = {"norm_attn": jnp.zeros((d,), jnp.float32)}
+        if kind == LayerKind.MLA:
+            p["attn"] = mla.init_mla_params(k1, cfg)
+        else:
+            p["attn"] = attention.init_attn_params(k1, cfg)
+        p["norm_mlp"] = jnp.zeros((d,), jnp.float32)
+        if _layer_is_moe(cfg, layer_idx):
+            p["mlp"] = moe_mod.init_moe_params(k2, d, cfg.moe)
+        else:
+            p["mlp"] = init_mlp_params(k2, d, cfg.d_ff, cfg.mlp_act)
+        if cfg.post_block_norm:
+            p["post_norm_attn"] = jnp.zeros((d,), jnp.float32)
+            p["post_norm_mlp"] = jnp.zeros((d,), jnp.float32)
+        return p
+    if kind == LayerKind.MAMBA:
+        p = {"norm": jnp.zeros((d,), jnp.float32),
+             "mixer": mamba.init_mamba_params(k1, cfg)}
+        if _layer_is_moe(cfg, layer_idx):
+            p["norm_mlp"] = jnp.zeros((d,), jnp.float32)
+            p["mlp"] = moe_mod.init_moe_params(k2, d, cfg.moe)
+        elif cfg.d_ff > 0:
+            p["norm_mlp"] = jnp.zeros((d,), jnp.float32)
+            p["mlp"] = init_mlp_params(k2, d, cfg.d_ff, cfg.mlp_act)
+        return p
+    if kind == LayerKind.MLSTM:
+        return {"norm": jnp.zeros((d,), jnp.float32),
+                "mixer": xlstm.init_mlstm_params(k1, cfg)}
+    if kind == LayerKind.SLSTM:
+        return {"norm": jnp.zeros((d,), jnp.float32),
+                "mixer": xlstm.init_slstm_params(k1, cfg)}
+    raise ValueError(kind)
+
+
+def _layer_specs(cfg: ModelConfig, kind: LayerKind, layer_idx: int) -> dict:
+    if kind in _ATTN_KINDS:
+        s = {"norm_attn": (None,), "norm_mlp": (None,)}
+        if kind == LayerKind.MLA:
+            s["attn"] = mla.mla_param_specs(cfg)
+        else:
+            s["attn"] = attention.attn_param_specs(cfg)
+        if _layer_is_moe(cfg, layer_idx):
+            s["mlp"] = moe_mod.moe_param_specs(cfg.moe)
+        else:
+            s["mlp"] = mlp_param_specs(cfg.mlp_act)
+        if cfg.post_block_norm:
+            s["post_norm_attn"] = (None,)
+            s["post_norm_mlp"] = (None,)
+        return s
+    if kind == LayerKind.MAMBA:
+        s = {"norm": (None,), "mixer": mamba.mamba_param_specs(cfg)}
+        if _layer_is_moe(cfg, layer_idx):
+            s["norm_mlp"] = (None,)
+            s["mlp"] = moe_mod.moe_param_specs(cfg.moe)
+        elif cfg.d_ff > 0:
+            s["norm_mlp"] = (None,)
+            s["mlp"] = mlp_param_specs(cfg.mlp_act)
+        return s
+    if kind == LayerKind.MLSTM:
+        return {"norm": (None,), "mixer": xlstm.mlstm_param_specs(cfg)}
+    if kind == LayerKind.SLSTM:
+        return {"norm": (None,), "mixer": xlstm.slstm_param_specs(cfg)}
+    raise ValueError(kind)
+
+
+def _tag(x: jax.Array, cfg: ModelConfig, name: str) -> jax.Array:
+    """Name intermediates for the 'names' remat policy: the backward pass
+    then keeps mixer/MLP outputs and recomputes only the cheap projections,
+    trading a little activation memory for most of the remat recompute."""
+    if cfg.remat_policy == "names":
+        from jax.ad_checkpoint import checkpoint_name
+
+        return checkpoint_name(x, name)
+    return x
+
+
+def _apply_layer(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    kind: LayerKind,
+    layer_idx: int,
+    cache,
+):
+    """Returns (x, new_cache, aux)."""
+    aux = {}
+    eps = cfg.norm_eps
+    if kind in _ATTN_KINDS:
+        h = common.rms_norm(x, params["norm_attn"], eps)
+        if kind == LayerKind.MLA:
+            h, new_cache = mla.mla_block(params["attn"], h, positions, cfg, cache)
+        else:
+            h, new_cache = attention.attention_block(
+                params["attn"], h, positions, cfg, kind, cache
+            )
+        h = _tag(h, cfg, "mixer_out")
+        if cfg.post_block_norm:
+            h = common.rms_norm(h, params["post_norm_attn"], eps)
+        x = x + h
+        h = common.rms_norm(x, params["norm_mlp"], eps)
+        if _layer_is_moe(cfg, layer_idx):
+            h, moe_aux = moe_mod.moe_block(params["mlp"], h, cfg.moe)
+            aux = moe_aux
+        else:
+            h = mlp_block(params["mlp"], h, cfg.mlp_act)
+        h = _tag(h, cfg, "mlp_out")
+        if cfg.post_block_norm:
+            h = common.rms_norm(h, params["post_norm_mlp"], eps)
+        return x + h, new_cache, aux
+
+    if kind == LayerKind.MAMBA:
+        h = common.rms_norm(x, params["norm"], eps)
+        h, new_cache = mamba.mamba_block(params["mixer"], h, cfg, cache)
+        x = x + h
+        if "mlp" in params:
+            h = common.rms_norm(x, params["norm_mlp"], eps)
+            if _layer_is_moe(cfg, layer_idx):
+                h, aux = moe_mod.moe_block(params["mlp"], h, cfg.moe)
+            else:
+                h = mlp_block(params["mlp"], h, cfg.mlp_act)
+            x = x + h
+        return x, new_cache, aux
+
+    if kind == LayerKind.MLSTM:
+        h = common.rms_norm(x, params["norm"], eps)
+        h, new_cache = xlstm.mlstm_block(params["mixer"], h, cfg, cache)
+        return x + h, new_cache, aux
+
+    if kind == LayerKind.SLSTM:
+        h = common.rms_norm(x, params["norm"], eps)
+        h, new_cache = xlstm.slstm_block(params["mixer"], h, cfg, cache)
+        return x + h, new_cache, aux
+    raise ValueError(kind)
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: LayerKind, batch: int, max_len: int, dtype):
+    if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        return attention.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == LayerKind.MLA:
+        return mla.init_mla_cache(cfg, batch, max_len, dtype)
+    if kind == LayerKind.MAMBA:
+        return mamba.init_mamba_state(cfg, batch)
+    if kind == LayerKind.MLSTM:
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == LayerKind.SLSTM:
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# LMModel
+# --------------------------------------------------------------------------
+class LMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- init ------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_embed, k_head, k_prefix, k_units = jax.random.split(key, 4)
+        params: dict = {
+            "embed": common.embed_init(k_embed, (cfg.vocab_size, cfg.d_model)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                k_head, (cfg.d_model, cfg.vocab_size)
+            )
+        params["prefix"] = [
+            _init_layer(jax.random.fold_in(k_prefix, i), cfg, kind, i)
+            for i, kind in enumerate(cfg.prefix)
+        ]
+
+        def init_unit(key_u):
+            base = len(cfg.prefix)
+            return [
+                _init_layer(jax.random.fold_in(key_u, p), cfg, kind, base + p)
+                for p, kind in enumerate(cfg.pattern_unit)
+            ]
+
+        unit_keys = jax.random.split(k_units, cfg.num_units)
+        params["units"] = jax.vmap(init_unit)(unit_keys)
+        return params
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---------------- sharding specs ---------------------------------------
+    def param_specs(self) -> Params:
+        """Pytree of logical-axis tuples, same structure as init()."""
+        cfg = self.cfg
+        specs: dict = {
+            "embed": ("vocab", "fsdp"),
+            "final_norm": (None,),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ("fsdp", "vocab")
+        specs["prefix"] = [
+            _layer_specs(cfg, kind, i) for i, kind in enumerate(cfg.prefix)
+        ]
+        base = len(cfg.prefix)
+        unit = [
+            _layer_specs(cfg, kind, base + p)
+            for p, kind in enumerate(cfg.pattern_unit)
+        ]
+        # stacked along the leading units axis -> prepend "layers"
+        specs["units"] = jax.tree.map(
+            lambda axes: ("layers", *axes),
+            unit,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        return specs
+
+    # ---------------- forward ----------------------------------------------
+    def _embed(self, params: Params, inputs: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if inputs.ndim == 3:                 # stub frontend embeddings
+            x = inputs.astype(dtype)
+        else:
+            x = params["embed"].astype(dtype)[inputs]
+            if cfg.post_block_norm:          # gemma2 normalises the embedding
+                x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+        if cfg.pos_embedding == "sinusoidal":
+            pos = positions if positions.ndim == 2 else positions[..., 0]
+            x = x + common.sinusoidal_embedding(pos, cfg.d_model).astype(dtype)
+        return common.with_logical(x, "batch", "seq", None)
+
+    def _logits(self, params: Params, x: jax.Array):
+        cfg = self.cfg
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, params["embed"].astype(x.dtype)
+            )
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+            )
+        logits = common.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        return common.with_logical(logits, "batch", "seq", "vocab")
+
+    def apply(
+        self,
+        params: Params,
+        inputs: jax.Array,
+        positions: Optional[jax.Array] = None,
+        caches: Optional[Caches] = None,
+    ) -> tuple[jax.Array, Optional[Caches], dict]:
+        """Returns (logits (B,S,V) f32, new_caches, aux)."""
+        cfg = self.cfg
+        b, s = inputs.shape[:2]
+        if positions is None:
+            start = 0 if caches is None else _cache_index(caches, cfg)
+            positions = start + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            if cfg.pos_embedding == "mrope":
+                # text-only default: all three M-RoPE streams share the
+                # sequential position (matches qwen2-vl's text behaviour).
+                positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+        x = self._embed(params, inputs, positions)
+        aux_sum = {"aux_loss": 0.0, "z_loss": 0.0, "fraction_dropped": 0.0}
+
+        def accum(aux_sum, aux):
+            if not aux:
+                return aux_sum
+            return {k: aux_sum[k] + aux[k] for k in aux_sum}
+
+        # ---- prefix layers (unscanned) ----
+        new_prefix_caches = []
+        for i, kind in enumerate(cfg.prefix):
+            cache_i = None if caches is None else caches["prefix"][i]
+            x, nc, aux = _apply_layer(
+                params["prefix"][i], x, positions, cfg, kind, i, cache_i
+            )
+            new_prefix_caches.append(nc)
+            aux_sum = accum(aux_sum, aux)
+
+        # ---- scanned units ----
+        base = len(cfg.prefix)
+
+        def unit_fn(x, unit_params, unit_caches, positions):
+            new_caches_u = []
+            aux_u = {k: jnp.zeros((), jnp.float32) for k in aux_sum}
+            for p, kind in enumerate(cfg.pattern_unit):
+                cache_p = None if unit_caches is None else unit_caches[p]
+                x, nc, aux = _apply_layer(
+                    unit_params[p], x, positions, cfg, kind, base + p, cache_p
+                )
+                new_caches_u.append(nc)
+                aux_u = accum(aux_u, {k: aux.get(k, 0.0) for k in aux_u} if aux else {})
+            return x, new_caches_u, aux_u
+
+        if cfg.remat:
+            if cfg.remat_policy == "names":
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "mixer_out", "mlp_out"
+                )
+            else:
+                policy = jax.checkpoint_policies.nothing_saveable
+            unit_fn = jax.checkpoint(unit_fn, policy=policy, static_argnums=())
+
+        if caches is None:
+            def scan_body(x, unit_params):
+                x, _, aux_u = unit_fn(x, unit_params, None, positions)
+                return x, aux_u
+
+            x, aux_stack = jax.lax.scan(scan_body, x, params["units"])
+            new_unit_caches = None
+        else:
+            def scan_body(x, scanned):
+                unit_params, unit_caches = scanned
+                x, ncs, aux_u = unit_fn(x, unit_params, unit_caches, positions)
+                return x, (ncs, aux_u)
+
+            x, (new_unit_caches, aux_stack) = jax.lax.scan(
+                scan_body, x, (params["units"], caches["units"])
+            )
+        aux_sum = accum(aux_sum, jax.tree.map(jnp.sum, aux_stack))
+
+        logits = self._logits(params, x)
+        new_caches = None
+        if caches is not None:
+            new_caches = {"prefix": new_prefix_caches, "units": new_unit_caches}
+        return logits, new_caches, aux_sum
+
+    # ---------------- loss --------------------------------------------------
+    def loss(self, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        """batch: {"inputs": (B,S) or (B,S,D), "targets": (B,S) int32,
+        optional "mask": (B,S)}.  Returns (scalar loss, metrics)."""
+        logits, _, aux = self.apply(
+            params, batch["inputs"], batch.get("positions")
+        )
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            denom = float(nll.size)
+        ce = jnp.sum(nll) / denom
+        # logit z-loss for stability at scale (production trick).
+        z = jax.nn.logsumexp(logits, axis=-1)
+        z_loss = 1e-4 * jnp.mean(jnp.square(z))
+        total = ce + z_loss + aux["aux_loss"] + aux["z_loss"]
+        metrics = {
+            "loss": total, "ce": ce,
+            "moe_aux": aux["aux_loss"], "moe_dropped": aux["fraction_dropped"],
+        }
+        return total, metrics
+
+    # ---------------- caches -------------------------------------------------
+    def init_caches(
+        self, batch: int, max_len: int, dtype=jnp.bfloat16
+    ) -> Caches:
+        cfg = self.cfg
+        prefix = [
+            _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.prefix
+        ]
+
+        def one_unit(_):
+            return [
+                _init_layer_cache(cfg, kind, batch, max_len, dtype)
+                for kind in cfg.pattern_unit
+            ]
+
+        units = jax.vmap(one_unit)(jnp.arange(cfg.num_units))
+        return {"prefix": prefix, "units": units}
+
+
+def _layer_cache_specs(cfg: ModelConfig, kind: LayerKind):
+    """Logical axes for each cache/state leaf of one layer."""
+    if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        return attention.KVCache(
+            k=("batch", "seq_kv", "kv_heads", None),
+            v=("batch", "seq_kv", "kv_heads", None),
+            index=(),
+        )
+    if kind == LayerKind.MLA:
+        return mla.MLACache(
+            c_kv=("batch", "seq_kv", None),
+            k_rope=("batch", "seq_kv", None),
+            index=(),
+        )
+    if kind == LayerKind.MAMBA:
+        return mamba.MambaState(
+            conv=("batch", None, "conv_dim"),
+            ssm=("batch", "conv_dim", "state"),
+            index=(),
+        )
+    if kind == LayerKind.MLSTM:
+        return xlstm.MLSTMState(
+            c=("batch", None, None, None),
+            n=("batch", None, None),
+            m=("batch", None),
+            conv=("batch", None, "conv_dim"),
+            index=(),
+        )
+    if kind == LayerKind.SLSTM:
+        return xlstm.SLSTMState(
+            c=("batch", None, None),
+            n=("batch", None, None),
+            h=("batch", None, None),
+            m=("batch", None, None),
+            index=(),
+        )
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical-axis pytree matching init_caches structure."""
+    prefix = [_layer_cache_specs(cfg, kind) for kind in cfg.prefix]
+    unit = [_layer_cache_specs(cfg, kind) for kind in cfg.pattern_unit]
+    units = jax.tree.map(
+        lambda axes: ("layers", *axes),
+        unit,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+    return {"prefix": prefix, "units": units}
+
+
+def _cache_index(caches, cfg: ModelConfig) -> jax.Array:
+    """Current sequence index from any layer cache."""
+    if cfg.prefix:
+        return caches["prefix"][0].index
+    first = caches["units"][0]
+    return first.index[0]
+
+
+# --------------------------------------------------------------------------
+# parameter counting (for roofline MODEL_FLOPS)
+# --------------------------------------------------------------------------
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = LMModel(cfg)
+    shapes = model.abstract_params()
+
+    def routed_scale(path: str) -> float:
+        if not active_only or cfg.moe is None:
+            return 1.0
+        is_routed = (
+            "mlp" in path and "shared" not in path
+            and any(k in path for k in ("w_gate", "w_up", "w_down"))
+            and "router" not in path
+        )
+        # routed experts contribute top_k/num_experts of their params
+        return cfg.moe.top_k / cfg.moe.num_experts if is_routed else 1.0
+
+    total = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        scale = 1.0
+        if active_only and cfg.moe is not None and "units" in pstr:
+            # expert tensors have a leading (units, experts, ...) shape
+            if leaf.ndim >= 3 and leaf.shape[1] == cfg.moe.num_experts:
+                scale = cfg.moe.top_k / cfg.moe.num_experts
+        total += leaf.size * scale
+    return int(total)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts with STATIC capacity-based dispatch (GShard-style).
+
+The irregular token->expert routing (a data-dependent scatter on GPU
+implementations) is regularised into fixed-shape einsums -- the same
+irregular->regular move the paper makes for triangulation:
+
+    dispatch (T, E, C) one-hot  x  tokens (T, D)  ->  expert inputs (E, C, D)
+    expert FFN (E, C, D) -> (E, C, D)
+    combine (T, E, C)  ->  token outputs (T, D)
+
+Experts shard over the ``model`` axis (EP); the dispatch einsums become
+all-to-alls under GSPMD.  Overflowing tokens are dropped (capacity_factor
+bounds them) and recovered by the shared experts / residual path --
+standard TPU practice.
+
+Used by deepseek-v2 (2 shared + 64/160 routed, top-6) and jamba (16 routed,
+top-2, every other layer).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import MoeConfig
+from repro.models.mlp import init_mlp_params, mlp_block, mlp_param_specs
+
+
+def _capacity(tokens: int, moe: MoeConfig) -> int:
+    c = int(tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def init_moe_params(key: jax.Array, d_model: int, moe: MoeConfig) -> dict:
+    kr, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    e, dx = moe.num_experts, moe.d_expert
+    params = {
+        "router": common.dense_init(kr, (d_model, e)),
+        "w_gate": common.dense_init(ke1, (e, d_model, dx), in_axis=1),
+        "w_up": common.dense_init(ke2, (e, d_model, dx), in_axis=1),
+        "w_down": common.dense_init(ke3, (e, dx, d_model), in_axis=1),
+    }
+    if moe.num_shared > 0:
+        params["shared"] = init_mlp_params(
+            ks, d_model, moe.num_shared * dx, "silu"
+        )
+    return params
+
+
+def moe_param_specs(moe: MoeConfig) -> dict:
+    specs = {
+        "router": ("fsdp", None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if moe.num_shared > 0:
+        specs["shared"] = mlp_param_specs("silu")
+    return specs
+
+
+def moe_block(
+    params: dict,
+    x: jax.Array,             # (B, S, D)
+    moe: MoeConfig,
+) -> tuple[jax.Array, dict]:
+    """Returns (out (B, S, D), aux {aux_loss, z_loss, fraction_dropped})."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    cap = _capacity(t, moe)
+    dtype = x.dtype
+
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection, renormalised.
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumulative counts, slot = one-hot(C).
+    sel = jax.nn.one_hot(top_e, e, dtype=jnp.int32)           # (T, k, E)
+    # order: expert choice 0 of all tokens first, then choice 1, ...
+    sel_flat = sel.transpose(1, 0, 2).reshape(k * t, e)       # (k*T, E)
+    pos_flat = jnp.cumsum(sel_flat, axis=0) - sel_flat        # slots before me
+    pos = pos_flat.reshape(k, t, e).transpose(1, 0, 2)        # (T, k, E)
+    slot = jnp.sum(pos * sel, axis=-1)                        # (T, k)
+    within = slot < cap
+
+    gate = top_p * within.astype(jnp.float32)                 # drop overflow
+    # dispatch/combine tensors (T, E, C)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32)    # (T, k, C)
+    disp = jnp.einsum(
+        "tke,tkc->tec", sel.astype(jnp.float32),
+        slot_oh * within[..., None].astype(jnp.float32),
+    )
+    comb = jnp.einsum("tke,tkc->tec", jnp.broadcast_to(gate[..., None], sel.shape)
+                      * sel.astype(jnp.float32), slot_oh)
+
+    disp = common.with_logical(disp.astype(dtype), "batch", "experts", None)
+    ex_in = jnp.einsum("tec,td->ecd", disp, xt)               # (E, C, D)
+    ex_in = common.with_logical(ex_in, "experts", None, None)
+
+    g = jnp.einsum("ecd,edf->ecf", ex_in, params["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", ex_in, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    ex_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dtype))
+    ex_out = common.with_logical(ex_out, "experts", None, None)
+
+    out = jnp.einsum("tec,ecd->td", comb.astype(dtype), ex_out)
+
+    if moe.num_shared > 0:
+        out = out + mlp_block(params["shared"], x, "silu").reshape(t, d)
+
+    # load-balance aux + router z losses (Switch/GShard standard).
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(jnp.sum(sel, axis=1).astype(jnp.float32), axis=0)
+    aux_loss = moe.aux_loss * e * jnp.sum(me * ce) / k
+    z_loss = moe.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    dropped = 1.0 - jnp.mean(within.astype(jnp.float32))
+    aux = {"aux_loss": aux_loss, "z_loss": z_loss, "fraction_dropped": dropped}
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,364 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, recurrent) -- Beck et al., arXiv:2405.04517.
+
+mLSTM is computed in the chunkwise-parallel form (intra-chunk quadratic
+attention-like term + inter-chunk state passing) with exp-gate
+stabilisation via the running max m, so training never materialises the
+(S x S) decay matrix beyond a chunk.  sLSTM is inherently sequential
+(recurrent gate connections) and runs under lax.scan.
+
+Both blocks carry O(1) per-token state for decode, which is what makes the
+xlstm-350m arch eligible for the long_500k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+MLSTM_CHUNK = 64
+MLSTM_HEADS = 4
+SLSTM_HEADS = 4
+CONV_K = 4
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    c: jax.Array          # (B, H, dk, dv)
+    n: jax.Array          # (B, H, dk)
+    m: jax.Array          # (B, H)
+    conv: jax.Array       # (B, CONV_K-1, d_inner)
+    index: jax.Array
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array          # (B, H, dh)
+    n: jax.Array          # (B, H, dh)
+    h: jax.Array          # (B, H, dh)
+    m: jax.Array          # (B, H, dh)
+    index: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    MLSTMState, data_fields=["c", "n", "m", "conv", "index"], meta_fields=[]
+)
+jax.tree_util.register_dataclass(
+    SLSTMState, data_fields=["c", "n", "h", "m", "index"], meta_fields=[]
+)
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    d_inner = 2 * cfg.d_model            # projection factor 2
+    return d_inner, d_inner // MLSTM_HEADS
+
+
+def init_mlstm_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, _ = _mlstm_dims(cfg)
+    keys = jax.random.split(key, 8)
+    return {
+        "w_up": common.dense_init(keys[0], (d, 2 * d_inner)),
+        "conv_w": 0.1 * jax.random.normal(keys[1], (CONV_K, d_inner), jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "w_q": common.dense_init(keys[2], (d_inner, d_inner)),
+        "w_k": common.dense_init(keys[3], (d_inner, d_inner)),
+        "w_v": common.dense_init(keys[4], (d_inner, d_inner)),
+        "w_if": common.dense_init(keys[5], (d_inner, 2 * MLSTM_HEADS)),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((MLSTM_HEADS,)), 3.0 * jnp.ones((MLSTM_HEADS,))]
+        ),
+        "ogate_skip": jnp.zeros((d_inner,), jnp.float32),
+        "w_down": common.dense_init(keys[6], (d_inner, d)),
+    }
+
+
+def mlstm_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "w_up": ("fsdp", "conv_dim"),
+        "conv_w": (None, "conv_dim"),
+        "conv_b": ("conv_dim",),
+        "w_q": ("conv_dim", "fsdp"),
+        "w_k": ("conv_dim", "fsdp"),
+        "w_v": ("conv_dim", "fsdp"),
+        "w_if": ("conv_dim", None),
+        "if_bias": (None,),
+        "ogate_skip": ("conv_dim",),
+        "w_down": ("conv_dim", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, b, state_conv=None):
+    """x (B,S,E); depthwise conv kernel w (K,E). Returns (y, new_tail)."""
+    bsz, s, e = x.shape
+    k = w.shape[0]
+    if state_conv is None:
+        pad = jnp.zeros((bsz, k - 1, e), x.dtype)
+    else:
+        pad = state_conv.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros((bsz, s, e), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    return y.astype(x.dtype), xp[:, s:]
+
+
+def _mlstm_chunk(q, k, v, logf, logi, c0, n0, m0):
+    """One chunk of the stabilised chunkwise-parallel mLSTM.
+
+    q/k/v: (B, H, C, dh); logf/logi: (B, H, C); state (c0 (B,H,dk,dv),
+    n0 (B,H,dk), m0 (B,H)).  Returns (h (B,H,C,dh), c1, n1, m1).
+    """
+    ck = q.shape[2]
+    a = jnp.cumsum(logf, axis=-1)                        # (B,H,C) sum_{l<=i} logf
+    # intra-chunk log weights: a_i - a_j + logi_j  for j <= i
+    w_log = a[..., :, None] - a[..., None, :] + logi[..., None, :]
+    mask = jnp.tril(jnp.ones((ck, ck), bool))
+    w_log = jnp.where(mask, w_log, -jnp.inf)
+    # stabiliser per query position
+    m_intra = jnp.max(w_log, axis=-1)                    # (B,H,C)
+    m_inter = m0[..., None] + a                          # (B,H,C)
+    m_i = jnp.maximum(m_intra, m_inter)
+
+    w = jnp.exp(w_log - m_i[..., None])                  # (B,H,C,C)
+    decay = jnp.exp(m_inter - m_i)                       # (B,H,C)
+
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qk = jnp.einsum("bhid,bhjd->bhij", q, k) * scale
+    num = jnp.einsum("bhij,bhjd->bhid", w * qk, v) + \
+        decay[..., None] * jnp.einsum("bhid,bhde->bhie", q * scale, c0)
+    den_vec = jnp.einsum("bhij,bhjd->bhid", w, k) + \
+        decay[..., None] * n0[:, :, None, :]
+    den = jnp.abs(jnp.einsum("bhid,bhid->bhi", q * scale, den_vec))
+    h = num / jnp.maximum(den, jnp.exp(-m_i))[..., None]
+
+    # chunk-final state (position ck-1)
+    a_last = a[..., -1]
+    m1 = jnp.maximum(m0 + a_last, m_intra[..., -1])
+    w_last = jnp.exp(
+        a_last[..., None] - a + logi - m1[..., None]
+    )                                                    # (B,H,C)
+    c1 = jnp.exp(m0 + a_last - m1)[..., None, None] * c0 + jnp.einsum(
+        "bhj,bhjd,bhje->bhde", w_last, k, v
+    )
+    n1 = jnp.exp(m0 + a_last - m1)[..., None] * n0 + jnp.einsum(
+        "bhj,bhjd->bhd", w_last, k
+    )
+    return h, c1, n1, m1
+
+
+def mlstm_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[MLSTMState] = None,
+) -> tuple[jax.Array, Optional[MLSTMState]]:
+    dtype = x.dtype
+    bsz, s, d = x.shape
+    d_inner, dh = _mlstm_dims(cfg)
+    hs = MLSTM_HEADS
+
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = common.with_logical(xm, "batch", "seq", "conv_dim")
+
+    conv_in = state.conv if state is not None else None
+    xc, conv_tail = _causal_conv(xm, params["conv_w"], params["conv_b"], conv_in)
+
+    q = jnp.einsum("bse,ef->bsf", xc, params["w_q"].astype(dtype))
+    k = jnp.einsum("bse,ef->bsf", xc, params["w_k"].astype(dtype))
+    v = jnp.einsum("bse,ef->bsf", xm, params["w_v"].astype(dtype))
+
+    gates = jnp.einsum("bse,eg->bsg", xc, params["w_if"].astype(dtype))
+    gates = gates.astype(jnp.float32) + params["if_bias"].astype(jnp.float32)
+    logi, logf = gates[..., :hs], jax.nn.log_sigmoid(gates[..., hs:])
+
+    def heads(t):
+        return t.reshape(bsz, s, hs, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    logi_t = logi.transpose(0, 2, 1)                     # (B,H,S)
+    logf_t = logf.transpose(0, 2, 1)
+
+    if state is not None and s == 1:
+        c0, n0, m0 = state.c, state.n, state.m
+        h, c1, n1, m1 = _mlstm_chunk(
+            qh, kh, vh, logf_t, logi_t, c0, n0, m0
+        )
+        new_state = MLSTMState(
+            c=c1, n=n1, m=m1, conv=conv_tail, index=state.index + 1
+        )
+    else:
+        ck = min(MLSTM_CHUNK, s)
+        assert s % ck == 0, "mlstm: seq not divisible by chunk"
+        nc = s // ck
+
+        def split_chunks(t):  # (B,H,S,...) -> (nc, B,H,ck,...)
+            return t.reshape(bsz, hs, nc, ck, *t.shape[3:]).transpose(
+                2, 0, 1, 3, *range(4, t.ndim + 1)
+            )
+
+        qs, ks, vs = split_chunks(qh), split_chunks(kh), split_chunks(vh)
+        fs = logf_t.reshape(bsz, hs, nc, ck).transpose(2, 0, 1, 3)
+        is_ = logi_t.reshape(bsz, hs, nc, ck).transpose(2, 0, 1, 3)
+
+        if state is not None:
+            carry0 = (state.c, state.n, state.m)
+        else:
+            carry0 = (
+                jnp.zeros((bsz, hs, dh, dh), jnp.float32),
+                jnp.zeros((bsz, hs, dh), jnp.float32),
+                jnp.full((bsz, hs), -1e30, jnp.float32),
+            )
+
+        def step(carry, inp):
+            c0, n0, m0 = carry
+            qc, kc, vc, fc, ic = inp
+            h, c1, n1, m1 = _mlstm_chunk(qc, kc, vc, fc, ic, c0, n0, m0)
+            return (c1, n1, m1), h
+
+        (c1, n1, m1), hs_out = jax.lax.scan(step, carry0, (qs, ks, vs, fs, is_))
+        h = hs_out.transpose(1, 2, 0, 3, 4).reshape(bsz, hs, s, dh)
+        if state is not None:
+            new_state = MLSTMState(
+                c=c1, n=n1, m=m1, conv=conv_tail, index=state.index + s
+            )
+        else:
+            new_state = None
+
+    h = h.transpose(0, 2, 1, 3).reshape(bsz, s, d_inner).astype(dtype)
+    h = h + xc * params["ogate_skip"].astype(dtype)      # learnable skip
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["w_down"].astype(dtype))
+    return common.with_logical(out, "batch", "seq", None), new_state
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    """(num_heads, head_dim) for the sLSTM's block-diagonal recurrence."""
+    return SLSTM_HEADS, cfg.d_model // SLSTM_HEADS
+
+
+def init_slstm_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    _, dh = _slstm_dims(cfg)
+    keys = jax.random.split(key, 6)
+    d_ff = int(d * 4 / 3 / 64 + 1) * 64                  # pf 4/3, rounded
+    return {
+        "w_gates": common.dense_init(keys[0], (d, 4 * d)),   # i,f,z,o from x
+        "r_gates": 0.1 * jax.random.normal(
+            keys[1], (SLSTM_HEADS, dh, 4 * dh), jnp.float32
+        ),                                                   # recurrent, per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ),
+        "w_ff_gate": common.dense_init(keys[2], (d, d_ff)),
+        "w_ff_up": common.dense_init(keys[3], (d, d_ff)),
+        "w_ff_down": common.dense_init(keys[4], (d_ff, d)),
+    }
+
+
+def slstm_param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "w_gates": ("fsdp", None),
+        "r_gates": (None, None, None),
+        "gate_bias": (None,),
+        "w_ff_gate": ("fsdp", "ffn"),
+        "w_ff_up": ("fsdp", "ffn"),
+        "w_ff_down": ("ffn", "fsdp"),
+    }
+
+
+def _slstm_step(params, carry, gx):
+    """carry: (c, n, h, m) each (B,H,dh); gx: (B, 4D) pre-computed x-gates."""
+    c, n, h, m = carry
+    bsz = c.shape[0]
+    hs, dh = c.shape[1], c.shape[2]
+    rec = jnp.einsum(
+        "bhd,hde->bhe", h, params["r_gates"].astype(jnp.float32)
+    )                                                    # (B,H,4*dh)
+    g = gx.reshape(bsz, 4, hs, dh).transpose(0, 2, 1, 3).reshape(bsz, hs, 4 * dh)
+    g = g + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)            # each (B,H,dh)
+
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[SLSTMState] = None,
+) -> tuple[jax.Array, Optional[SLSTMState]]:
+    dtype = x.dtype
+    bsz, s, d = x.shape
+    hs, dh = _slstm_dims(cfg)
+
+    gx = jnp.einsum("bsd,de->bse", x, params["w_gates"].astype(dtype))
+    gx = gx.astype(jnp.float32) + params["gate_bias"].astype(jnp.float32)
+
+    if state is not None:
+        carry0 = (
+            state.c.astype(jnp.float32), state.n.astype(jnp.float32),
+            state.h.astype(jnp.float32), state.m.astype(jnp.float32),
+        )
+    else:
+        zeros = jnp.zeros((bsz, hs, dh), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((bsz, hs, dh), -1e30, jnp.float32))
+
+    carry, hseq = jax.lax.scan(
+        lambda c, g: _slstm_step(params, c, g), carry0, gx.transpose(1, 0, 2)
+    )
+    h = hseq.transpose(1, 0, 2, 3).reshape(bsz, s, d).astype(dtype)
+
+    new_state = None
+    if state is not None:
+        c1, n1, h1, m1 = carry
+        new_state = SLSTMState(c=c1, n=n1, h=h1, m=m1, index=state.index + s)
+
+    # post-mixer gated FFN (pf 4/3, GeLU), part of the sLSTM block.
+    gate = jnp.einsum("bsd,df->bsf", h, params["w_ff_gate"].astype(dtype))
+    up = jnp.einsum("bsd,df->bsf", h, params["w_ff_up"].astype(dtype))
+    y = jnp.einsum(
+        "bsf,fd->bsd", jax.nn.gelu(gate) * up, params["w_ff_down"].astype(dtype)
+    )
+    return common.with_logical(y, "batch", "seq", None), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_inner, dh = _mlstm_dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, MLSTM_HEADS, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, MLSTM_HEADS, dh), jnp.float32),
+        m=jnp.full((batch, MLSTM_HEADS), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, CONV_K - 1, d_inner), jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    hs, dh = _slstm_dims(cfg)
+    zeros = jnp.zeros((batch, hs, dh), jnp.float32)
+    return SLSTMState(
+        c=zeros, n=zeros, h=zeros,
+        m=jnp.full((batch, hs, dh), -1e30, jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )

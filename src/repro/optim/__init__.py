@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import ScheduleConfig, learning_rate  # noqa: F401
+from repro.optim.compression import ef_compress, ef_decompress  # noqa: F401

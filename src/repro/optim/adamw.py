@@ -1,0 +1,79 @@
+"""AdamW with dtype-configurable moment storage.
+
+At 398B params, fp32 m+v costs 8 bytes/param -- more than the bf16 weights.
+``m_dtype``/``v_dtype`` let big-MoE configs store moments in bf16 (a
+production memory trick; the update math still runs in fp32).  Global-norm
+clipping is fused into the update.
+
+State is a pytree mirroring params, so the same sharding specs apply
+(FSDP shards optimizer state exactly like weights = ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.dtype(cfg.m_dtype)), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.dtype(cfg.v_dtype)), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    cfg: AdamWConfig,
+    lr: jax.Array,
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,66 @@
+"""Error-feedback int8 gradient compression.
+
+Two production uses:
+  1. the gradient-ACCUMULATION buffer across microbatches is held in int8
+     (+ per-block scales) instead of fp32 -- ~4x memory on the largest
+     state alive during a train step;
+  2. cross-pod gradient all-reduce payloads shrink 4x (the pod axis rides
+     the slowest links), with the quantisation error fed back into the next
+     step instead of lost -- the standard EF-SGD/EF21 trick, which keeps
+     convergence unaffected to first order.
+
+Block-wise symmetric quantisation: per block of BLOCK values, scale =
+max|x| / 127.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def ef_compress(x: jax.Array, error: jax.Array | None = None):
+    """Quantise x (+ carried error) to int8. Returns (q, scales, new_error).
+
+    new_error has x's shape; (q, scales) represent dequant(q) ~= x + error.
+    """
+    x32 = x.astype(jnp.float32)
+    if error is not None:
+        x32 = x32 + error.astype(jnp.float32)
+    flat, pad = _pad_to_block(x32)
+    blocks = flat.reshape(-1, BLOCK)
+    scales = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scales, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * safe
+    err_flat = (blocks - deq).reshape(-1)
+    if pad:
+        err_flat = err_flat[:-pad]
+    new_error = err_flat.reshape(x.shape)
+    return q, scales.astype(jnp.float32), new_error
+
+
+def ef_decompress(q: jax.Array, scales: jax.Array, shape, dtype=jnp.float32):
+    deq = (q.astype(jnp.float32) * scales).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape).astype(dtype)
+
+
+def compression_ratio(shape) -> float:
+    """Payload bytes int8+scales vs fp32."""
+    n = 1
+    for s in shape:
+        n *= s
+    blocks = (n + BLOCK - 1) // BLOCK
+    return (n * 1 + blocks * 4) / (n * 4)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules: linear warmup + cosine/linear/constant decay."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    kind: str = "cosine"          # cosine | linear | constant
+
+
+def learning_rate(step, cfg: ScheduleConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    if cfg.kind == "constant":
+        decayed = jnp.asarray(cfg.peak_lr, jnp.float32)
+    else:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if cfg.kind == "cosine":
+            mult = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            mult = 1.0 - frac
+        floor = cfg.min_lr_ratio
+        decayed = cfg.peak_lr * (floor + (1 - floor) * mult)
+    return jnp.where(step < cfg.warmup_steps, warm, decayed)

@@ -1,0 +1,194 @@
+"""Training loop: microbatch gradient accumulation, sharded step function,
+checkpoint/restart, heartbeat + failure injection hooks.
+
+Memory structure (what makes the big configs fit):
+  * lax.scan over microbatches -> activations alive for ONE microbatch
+    (remat inside the model bounds per-unit activations);
+  * gradient accumulator dtype is a knob (fp32 default, bf16 for the
+    398B-class configs);
+  * optimizer moments dtype-configurable (see repro.optim.adamw).
+
+The jitted step is a pure function (params, opt_state, batch) -> ... so the
+XLA latency-hiding scheduler is free to overlap the backward's gradient
+all-reduces/reduce-scatters with remaining compute (compute/comm overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LMModel
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import ScheduleConfig, learning_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_steps: int = 100
+    microbatches: int = 1            # grad-accum steps per global batch
+    accum_dtype: str = "float32"     # bf16 halves the accumulator
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+
+
+def make_train_step(
+    model: LMModel,
+    opt_cfg: AdamWConfig,
+    sched_cfg: ScheduleConfig,
+    microbatches: int = 1,
+    accum_dtype: str = "float32",
+    donate: bool = True,
+    presplit: bool = False,
+    jit: bool = True,
+) -> Callable:
+    """Returns jitted (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    presplit=True: batch leaves already carry a leading (microbatches, ...)
+    axis with the INNER axis batch-sharded -- avoids the reshard a reshape
+    of a sharded batch dim would trigger under GSPMD (used by the launcher
+    and the dry-run).
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            mbs = batch if presplit else jax.tree.map(split, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params
+            )
+
+            def scan_fn(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(a.dtype), acc, g
+                )
+                return acc, (l, m)
+
+            grads, (losses, metrics_stack) = jax.lax.scan(scan_fn, acc0, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metrics_stack)
+
+        lr = learning_rate(opt_state["step"], sched_cfg)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, lr
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["lr"] = lr
+        metrics["loss_mean"] = loss
+        return params, opt_state, metrics
+
+    if not jit:
+        return train_step
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_argnums)
+
+
+class Trainer:
+    """Host-side orchestration: data, checkpoints, recovery, logging."""
+
+    def __init__(
+        self,
+        model: LMModel,
+        pipeline,
+        train_cfg: TrainConfig,
+        opt_cfg: Optional[AdamWConfig] = None,
+        sched_cfg: Optional[ScheduleConfig] = None,
+        checkpoint_mgr=None,
+        failure_injector: Optional[Callable[[int], None]] = None,
+    ):
+        from repro.runtime.checkpoint import CheckpointManager
+
+        self.model = model
+        self.pipeline = pipeline
+        self.cfg = train_cfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.sched_cfg = sched_cfg or ScheduleConfig(total_steps=train_cfg.num_steps)
+        self.ckpt = checkpoint_mgr or CheckpointManager(train_cfg.ckpt_dir)
+        self.failure_injector = failure_injector
+        self.step_fn = make_train_step(
+            model, self.opt_cfg, self.sched_cfg,
+            train_cfg.microbatches, train_cfg.accum_dtype,
+        )
+        self.history: list[dict] = []
+
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.cfg.seed)
+        params = self.model.init(rng)
+        opt_state = adamw_init(params, self.opt_cfg)
+        return {"params": params, "opt": opt_state}
+
+    def train(self, state=None, start_step: int = 0) -> dict:
+        """Runs to cfg.num_steps with checkpoint/restart recovery."""
+        if state is None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                start_step, state = self.ckpt.restore(self._abstract_state())
+            else:
+                state = self.init_state()
+
+        step = start_step
+        failures = 0
+        while step < self.cfg.num_steps:
+            try:
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                batch = self.pipeline.batch_at(step)
+                t0 = time.monotonic()
+                params, opt, metrics = self.step_fn(
+                    state["params"], state["opt"], batch
+                )
+                state = {"params": params, "opt": opt}
+                step += 1
+                if step % self.cfg.log_every == 0 or step == self.cfg.num_steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step
+                    m["step_time_s"] = time.monotonic() - t0
+                    self.history.append(m)
+                if step % self.cfg.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except _RECOVERABLE as e:   # simulated node failure and friends
+                failures += 1
+                if failures > 10:
+                    raise
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    state = self.init_state()
+                    step = 0
+                else:
+                    step, state = self.ckpt.restore(self._abstract_state())
+        self.ckpt.save(step, state, blocking=True)
+        return {"state": state, "step": step, "failures": failures,
+                "history": self.history}
+
+    def _abstract_state(self):
+        params = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(self.cfg.seed))
+        )
+        opt = jax.eval_shape(lambda: adamw_init(params, self.opt_cfg))
+        return {"params": params, "opt": opt}
+
+
+class SimulatedNodeFailure(RuntimeError):
+    pass
+
+
+_RECOVERABLE = (SimulatedNodeFailure,)

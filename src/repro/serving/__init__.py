@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.stereo_service import StereoService  # noqa: F401

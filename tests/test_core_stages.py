@@ -1,0 +1,217 @@
+"""Stage-level tests for the ELAS core: descriptors, support extraction,
+filtering, prior, grid vector, dense matching, post-processing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import descriptor as desc_mod
+from repro.core.dense import candidate_set, dense_disparity
+from repro.core.filtering import remove_inconsistent, remove_redundant
+from repro.core.grid_vector import build_grid_vector
+from repro.core.params import ElasParams
+from repro.core.postprocess import gap_interpolation, lr_consistency, median3x3
+from repro.core.prior import plane_prior, right_view_support
+from repro.core.support import INVALID, extract_support_grid
+from repro.data.stereo import synthetic_stereo_pair
+
+
+@pytest.fixture(scope="module")
+def scene():
+    il, ir, gt = synthetic_stereo_pair(height=100, width=150, d_max=32, seed=11)
+    return jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32), gt
+
+
+class TestDescriptor:
+    def test_sobel_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        img = rng.integers(0, 256, (40, 50)).astype(np.uint8)
+        gx, gy = desc_mod.sobel3x3(jnp.asarray(img, jnp.float32))
+        gx_ref, gy_ref = desc_mod.np_reference_sobel(img)
+        np.testing.assert_array_equal(np.asarray(gx), gx_ref)
+        np.testing.assert_array_equal(np.asarray(gy), gy_ref)
+
+    def test_descriptor_shape_dtype(self):
+        img = jnp.zeros((32, 48), jnp.float32)
+        d = desc_mod.extract(img)
+        assert d.shape == (32, 48, 16) and d.dtype == jnp.int8
+
+    def test_constant_image_zero_descriptor(self):
+        img = jnp.full((16, 16), 128.0, jnp.float32)
+        d = desc_mod.extract(img)
+        np.testing.assert_array_equal(np.asarray(d), 0)
+
+
+class TestSupport:
+    def test_known_shift_recovered(self):
+        """A pure horizontal shift must be recovered exactly at interior nodes."""
+        rng = np.random.default_rng(1)
+        shift = 7
+        tex = rng.integers(0, 256, (60, 140)).astype(np.float64)
+        img_r = tex[:, :120]
+        img_l = tex[:, : 120 + shift][:, shift - 0 :][:, :120] if False else tex[:, 0:120].copy()
+        # Left samples texture at x - d -> I_L(x) = T(x - shift), I_R(x) = T(x).
+        img_l = np.zeros((60, 120))
+        img_l[:, shift:] = tex[:, : 120 - shift]
+        img_l[:, :shift] = tex[:, :1]
+        p = ElasParams(disp_max=31)
+        dl = desc_mod.extract(jnp.asarray(img_l, jnp.float32))
+        dr = desc_mod.extract(jnp.asarray(img_r, jnp.float32))
+        grid = np.asarray(extract_support_grid(dl, dr, p))
+        gh, gw = grid.shape
+        interior = grid[1:-1, 4:-1]          # skip borders/margins
+        valid = interior != INVALID
+        assert valid.mean() > 0.6
+        assert np.all(interior[valid] == shift)
+
+    def test_untextured_rejected(self, scene):
+        p = ElasParams(disp_max=31)
+        flat = jnp.full((60, 120), 77.0, jnp.float32)
+        d = desc_mod.extract(flat)
+        grid = np.asarray(extract_support_grid(d, d, p))
+        assert np.all(grid == INVALID)
+
+
+class TestFiltering:
+    def test_inconsistent_outlier_removed(self):
+        p = ElasParams(incon_window=2, incon_threshold=5, incon_min_support=5)
+        g = np.full((9, 9), 20.0, np.float32)
+        g[4, 4] = 60.0                        # lone outlier in a consistent field
+        out = np.asarray(remove_inconsistent(jnp.asarray(g), p))
+        assert out[4, 4] == INVALID
+        assert out[0, 0] == 20.0
+
+    def test_sparse_point_without_support_removed(self):
+        p = ElasParams()
+        g = np.full((9, 9), INVALID, np.float32)
+        g[4, 4] = 30.0
+        out = np.asarray(remove_inconsistent(jnp.asarray(g), p))
+        assert out[4, 4] == INVALID
+
+    def test_redundant_interior_removed_boundary_kept(self):
+        p = ElasParams(redun_max_dist=1, redun_threshold=1)
+        g = np.full((5, 9), INVALID, np.float32)
+        g[2, :] = 10.0                        # constant run along a row
+        out = np.asarray(remove_redundant(jnp.asarray(g), p))
+        assert out[2, 0] == 10.0 and out[2, -1] == 10.0   # endpoints kept
+        assert np.all(out[2, 1:-1] == INVALID)            # interior redundant
+
+    def test_disparity_step_kept(self):
+        p = ElasParams(redun_max_dist=1, redun_threshold=1)
+        g = np.full((5, 8), INVALID, np.float32)
+        g[2, :4] = 10.0
+        g[2, 4:] = 30.0
+        out = np.asarray(remove_redundant(jnp.asarray(g), p))
+        assert out[2, 3] == 10.0 and out[2, 4] == 30.0    # step edges survive
+
+
+class TestPrior:
+    def test_planar_support_exactly_interpolated(self):
+        """A plane through the support nodes must reproduce the plane at
+        every pixel (slanted-plane prior exactness on the regular mesh)."""
+        p = ElasParams()
+        h, w = 50, 60
+        gh, gw = h // 5, w // 5
+        ii, jj = np.mgrid[0:gh, 0:gw].astype(np.float32)
+        support = 5.0 + 0.5 * jj + 0.25 * ii            # plane in node coords
+        mu = np.asarray(plane_prior(jnp.asarray(support), h, w, p))
+        yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+        expected = 5.0 + 0.5 * (xx - 2) / 5 + 0.25 * (yy - 2) / 5
+        np.testing.assert_allclose(mu, expected, atol=1e-4)
+
+    def test_right_view_support_shift(self):
+        p = ElasParams()
+        gh, gw = 6, 20
+        g = np.full((gh, gw), 10.0, np.float32)          # d = 10 = 2 nodes
+        out = np.asarray(right_view_support(jnp.asarray(g), p))
+        assert np.all(out[:, : gw - 2] == 10.0)          # shifted left 2 nodes
+
+
+class TestGridVector:
+    def test_contains_local_disparities(self):
+        p = ElasParams(grid_size=20, candidate_step=5, grid_vector_k=20)
+        g = np.full((16, 16), 12.0, np.float32)
+        g[:8] = 40.0
+        gv = np.asarray(build_grid_vector(jnp.asarray(g), p))
+        assert gv.shape == (4, 4, 20)
+        assert np.all(np.isin(gv[0, 0], [12.0, 40.0]) | (gv[0, 0] == 40.0))
+        assert np.all(gv[3, 3] == 12.0)
+
+    def test_invalid_cells_fall_back(self):
+        p = ElasParams()
+        g = np.full((16, 16), INVALID, np.float32)
+        gv = np.asarray(build_grid_vector(jnp.asarray(g), p))
+        assert np.all(gv == p.const_fill)
+
+
+class TestDense:
+    def test_candidate_set_static_size(self):
+        p = ElasParams()
+        mu = jnp.zeros((40, 40)) + 12.0
+        gv = jnp.zeros((2, 2, p.grid_vector_k)) + 9.0
+        c = candidate_set(mu, gv, p)
+        assert c.shape == (40, 40, p.num_candidates)
+
+    def test_perfect_shift_dense(self):
+        rng = np.random.default_rng(5)
+        shift = 6
+        tex = rng.integers(0, 256, (60, 130)).astype(np.float64)
+        img_r = tex[:, :120]
+        img_l = np.zeros((60, 120))
+        img_l[:, shift:] = tex[:, : 120 - shift]
+        img_l[:, :shift] = tex[:, :1]
+        p = ElasParams(disp_max=31)
+        dl = desc_mod.extract(jnp.asarray(img_l, jnp.float32))
+        dr = desc_mod.extract(jnp.asarray(img_r, jnp.float32))
+        mu = jnp.full((60, 120), float(shift))
+        gv = jnp.full((3, 6, p.grid_vector_k), float(shift))
+        disp = np.asarray(dense_disparity(dl, dr, mu, gv, p, direction=-1))
+        interior = disp[3:-3, shift + 3 : -3]
+        assert np.mean(interior == shift) > 0.95
+
+
+class TestPostprocess:
+    def test_lr_consistency_invalidates_mismatch(self):
+        p = ElasParams()
+        dl = jnp.full((4, 20), 5.0)
+        dr = jnp.full((4, 20), 5.0)
+        out = np.asarray(lr_consistency(dl, dr, p))
+        assert np.all(out[:, 6:] == 5.0)
+        dr_bad = jnp.full((4, 20), 9.0)
+        out2 = np.asarray(lr_consistency(dl, dr_bad, p))
+        assert np.all(out2 == INVALID)
+
+    def test_gap_interpolation_smooth_linear(self):
+        p = ElasParams(ipol_gap_width=7)
+        row = np.full((1, 12), INVALID, np.float32)
+        row[0, 2] = 10.0
+        row[0, 6] = 14.0
+        out = np.asarray(gap_interpolation(jnp.asarray(row), p))
+        np.testing.assert_allclose(out[0, 3:6], [11.0, 12.0, 13.0], atol=1e-5)
+
+    def test_gap_discontinuity_takes_min(self):
+        p = ElasParams(ipol_gap_width=7)
+        row = np.full((1, 12), INVALID, np.float32)
+        row[0, 2] = 10.0
+        row[0, 6] = 40.0
+        out = np.asarray(gap_interpolation(jnp.asarray(row), p))
+        np.testing.assert_allclose(out[0, 3:6], 10.0)
+
+    def test_wide_gap_not_filled(self):
+        p = ElasParams(ipol_gap_width=3)
+        row = np.full((1, 20), INVALID, np.float32)
+        row[0, 2] = 10.0
+        row[0, 12] = 10.0
+        out = np.asarray(gap_interpolation(jnp.asarray(row), p))
+        assert np.all(out[0, 3:12] == INVALID)
+
+    def test_median_removes_speckle(self):
+        field = np.full((9, 9), 7.0, np.float32)
+        field[4, 4] = 99.0
+        out = np.asarray(median3x3(jnp.asarray(field)))
+        assert out[4, 4] == 7.0
+
+    def test_median_preserves_invalid(self):
+        field = np.full((9, 9), 7.0, np.float32)
+        field[4, 4] = INVALID
+        out = np.asarray(median3x3(jnp.asarray(field)))
+        assert out[4, 4] == INVALID

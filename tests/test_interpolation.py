@@ -1,0 +1,169 @@
+"""Unit + property tests for the paper's support-point interpolation."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core.interpolation import interpolate_support
+from repro.core.params import ElasParams, FIG2_PARAMS
+from repro.core.support import INVALID
+
+
+def grid(rows):
+    return jnp.asarray(np.array(rows, np.float32))
+
+
+class TestPaperRules:
+    """The three textual rules of Sec. II-B."""
+
+    def test_horizontal_mean_when_consistent(self):
+        p = ElasParams(s_delta=5, epsilon=3.0, const_fill=0.0)
+        g = grid([[36, -1, -1, 38, -1, -1, -1, -1, -1, 36]])
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        # |36-38| = 2 <= eps -> mean
+        assert out[0, 1] == pytest.approx(37.0)
+        assert out[0, 2] == pytest.approx(37.0)
+
+    def test_horizontal_min_when_inconsistent(self):
+        p = ElasParams(s_delta=5, epsilon=3.0, const_fill=0.0)
+        g = grid([[26, -1, 38, -1, -1, -1, -1, -1, -1, -1]])
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        # |26-38| = 12 > eps -> min
+        assert out[0, 1] == pytest.approx(26.0)
+
+    def test_vertical_fallback(self):
+        p = ElasParams(s_delta=5, epsilon=3.0, const_fill=0.0)
+        g = grid(
+            [
+                [-1, -1, 26, -1],
+                [-1, -1, -1, -1],
+                [-1, -1, 24, -1],
+            ]
+        )
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        # No horizontal pair at (1, 2); vertical (26, 24): |2| <= 3 -> mean 25.
+        assert out[1, 2] == pytest.approx(25.0)
+
+    def test_constant_fallback(self):
+        p = ElasParams(s_delta=2, epsilon=3.0, const_fill=7.0)
+        g = grid([[-1] * 9 + [50]])
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        assert out[0, 0] == pytest.approx(7.0)
+
+    def test_window_respected(self):
+        p = ElasParams(s_delta=3, epsilon=3.0, const_fill=0.0)
+        g = grid([[10, -1, -1, -1, -1, -1, -1, -1, 10]])
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        # Position 4 is 4 away from both -> outside s_delta=3 -> constant.
+        assert out[0, 4] == pytest.approx(0.0)
+        # Position 2 has left at dist 2, right at dist 6 -> no pair -> constant.
+        assert out[0, 2] == pytest.approx(0.0)
+
+    def test_support_points_pass_through(self):
+        p = ElasParams(s_delta=5, epsilon=3.0, const_fill=0.0)
+        g = grid([[36, -1, 26, -1, 52]])
+        out = np.asarray(interpolate_support(g, p, border_extend=False))
+        assert out[0, 0] == 36 and out[0, 2] == 26 and out[0, 4] == 52
+
+    def test_border_extension_causal(self):
+        """Fig. 2 edge behaviour: trailing window truncated -> leading value."""
+        p = FIG2_PARAMS
+        g = grid([[36, -1, -1, 38, -1, -1, 38, -1]])
+        out = np.asarray(interpolate_support(g, p, border_extend=True))
+        assert out[0, 7] == pytest.approx(38.0)   # only-left at right edge
+        # Leading (left) edge does NOT extend backwards:
+        g2 = grid([[-1, 54, -1, -1, -1, 54, -1, -1]])
+        out2 = np.asarray(interpolate_support(g2, p, border_extend=True))
+        assert out2[0, 0] == pytest.approx(p.const_fill)
+
+
+class TestFig2Example:
+    """Unambiguous interior cells of the paper's Fig. 2 worked example."""
+
+    INPUT = [
+        [36, -1, -1, 38, -1, -1, 38, -1],
+        [-1, -1, 26, -1, 38, -1, -1, -1],
+        [38, -1, -1, -1, -1, -1, -1, -1],
+        [-1, -1, -1, 46, -1, 32, -1, -1],
+        [-1, -1, 24, -1, -1, -1, -1, -1],
+        [-1, 54, -1, -1, -1, 54, -1, -1],
+        [-1, -1, -1, 46, -1, -1, -1, -1],
+        [-1, 32, -1, -1, -1, 52, -1, -1],
+    ]
+
+    def test_interior_cells(self):
+        out = np.asarray(
+            interpolate_support(grid(self.INPUT), FIG2_PARAMS, border_extend=True)
+        )
+        assert out[0, 1] == pytest.approx(37.0)   # mean(36, 38)
+        assert out[0, 2] == pytest.approx(37.0)
+        assert out[0, 4] == pytest.approx(38.0)   # mean(38, 38)
+        assert out[0, 5] == pytest.approx(38.0)
+        assert out[1, 3] == pytest.approx(26.0)   # min(26, 38), 12 > eps
+        assert out[2, 2] == pytest.approx(25.0)   # vertical mean(26, 24)
+        assert out[3, 4] == pytest.approx(32.0)   # min(46, 32)
+        assert out[5, 2] == pytest.approx(54.0)   # mean(54, 54)
+        assert out[5, 3] == pytest.approx(54.0)
+        assert out[5, 4] == pytest.approx(54.0)
+        assert out[7, 2] == pytest.approx(32.0)   # min(32, 52)
+        assert out[7, 3] == pytest.approx(32.0)
+        assert out[7, 4] == pytest.approx(32.0)
+        assert out[1, 1] == pytest.approx(0.0)    # no pair anywhere -> C
+
+
+@st.composite
+def sparse_grids(draw):
+    shape = draw(st.tuples(st.integers(2, 12), st.integers(2, 12)))
+    vals = draw(
+        hnp.arrays(
+            np.float32,
+            shape,
+            elements=st.floats(0, 255, width=32).map(lambda v: float(round(v))),
+        )
+    )
+    mask = draw(hnp.arrays(np.bool_, shape))
+    return np.where(mask, vals, INVALID).astype(np.float32)
+
+
+class TestProperties:
+    @given(sparse_grids())
+    @settings(max_examples=60, deadline=None)
+    def test_complete_and_conservative(self, g):
+        """Output has no invalid entries; valid inputs are untouched; all
+        interpolated values lie within [min(valid ∪ C), max(valid ∪ C)]."""
+        p = ElasParams(s_delta=4, epsilon=5.0, const_fill=10.0)
+        out = np.asarray(interpolate_support(jnp.asarray(g), p))
+        assert not np.any(out == INVALID)
+        valid = g != INVALID
+        np.testing.assert_array_equal(out[valid], g[valid])
+        pool = np.concatenate([g[valid].ravel(), [p.const_fill]])
+        assert out.min() >= pool.min() - 1e-5
+        assert out.max() <= pool.max() + 1e-5
+
+    @given(sparse_grids())
+    @settings(max_examples=30, deadline=None)
+    def test_idempotent(self, g):
+        """Interpolating an already-complete grid changes nothing."""
+        p = ElasParams(s_delta=4, epsilon=5.0, const_fill=10.0)
+        once = interpolate_support(jnp.asarray(g), p)
+        twice = interpolate_support(once, p)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_constant_grid_exactly_reconstructed(self, seed):
+        """A constant-disparity scene survives sparsify->interpolate exactly
+        when gaps are within s_delta (hardware-regularity invariant)."""
+        rng = np.random.default_rng(seed)
+        p = ElasParams(s_delta=12, epsilon=5.0, const_fill=0.0)
+        g = np.full((10, 10), 17.0, np.float32)
+        mask = rng.random((10, 10)) < 0.4
+        # Pin the border so every vacancy has valid pairs in-window.
+        mask[0, :] = mask[-1, :] = True
+        mask[:, 0] = mask[:, -1] = True
+        sparse = np.where(mask, g, INVALID).astype(np.float32)
+        out = np.asarray(interpolate_support(jnp.asarray(sparse), p))
+        np.testing.assert_allclose(out, 17.0)

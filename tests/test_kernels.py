@@ -1,0 +1,212 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and input regimes, plus hypothesis property checks."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import descriptor as desc_mod
+from repro.core.params import ElasParams
+from repro.kernels import ops, ref
+from repro.kernels.dense_match import dense_match_pallas
+from repro.kernels.median import median3x3_pallas
+from repro.kernels.sobel import sobel_pallas
+from repro.kernels.support_match import support_match_pallas
+
+
+def _rand_img(rng, h, w):
+    return rng.integers(0, 256, (h, w)).astype(np.float32)
+
+
+def _rand_desc_pair(rng, h, w, shift):
+    """Descriptor pair from a shifted texture (so matches exist)."""
+    tex = rng.integers(0, 256, (h, w + shift)).astype(np.float32)
+    img_r = tex[:, :w]
+    img_l = np.zeros((h, w), np.float32)
+    img_l[:, shift:] = tex[:, : w - shift]
+    img_l[:, :shift] = tex[:, :1]
+    dl = desc_mod.extract(jnp.asarray(img_l))
+    dr = desc_mod.extract(jnp.asarray(img_r))
+    return dl, dr
+
+
+class TestSobelKernel:
+    @pytest.mark.parametrize(
+        "h,w,block", [(16, 24, 8), (17, 33, 8), (8, 128, 4), (30, 40, 16), (5, 7, 8)]
+    )
+    def test_matches_ref(self, h, w, block):
+        rng = np.random.default_rng(h * 1000 + w)
+        img = jnp.asarray(_rand_img(rng, h, w))
+        gx_k, gy_k = sobel_pallas(img, block_rows=block, interpret=True)
+        gx_r, gy_r = ops.sobel(img, backend="ref")
+        np.testing.assert_array_equal(np.asarray(gx_k), np.asarray(gx_r))
+        np.testing.assert_array_equal(np.asarray(gy_k), np.asarray(gy_r))
+
+    def test_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        img = _rand_img(rng, 20, 30)
+        gx_k, gy_k = sobel_pallas(jnp.asarray(img), interpret=True)
+        gx_n, gy_n = desc_mod.np_reference_sobel(img.astype(np.uint8))
+        np.testing.assert_array_equal(np.asarray(gx_k), gx_n)
+        np.testing.assert_array_equal(np.asarray(gy_k), gy_n)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.uint8])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(1)
+        img = jnp.asarray(rng.integers(0, 256, (12, 16))).astype(dtype)
+        gx_k, _ = sobel_pallas(img, interpret=True)
+        gx_r, _ = ops.sobel(img, backend="ref")
+        np.testing.assert_array_equal(np.asarray(gx_k), np.asarray(gx_r))
+
+
+class TestSupportMatchKernel:
+    @pytest.mark.parametrize(
+        "gh,w,num_disp,step,block",
+        [
+            (4, 80, 16, 5, 2),
+            (6, 120, 32, 5, 4),
+            (3, 60, 16, 4, 4),     # gh not divisible by block
+            (8, 100, 24, 10, 3),
+            (1, 50, 8, 5, 1),
+        ],
+    )
+    def test_matches_ref(self, gh, w, num_disp, step, block):
+        rng = np.random.default_rng(gh * 100 + w)
+        dl, dr = _rand_desc_pair(rng, gh, w, shift=min(7, num_disp - 1))
+        kwargs = dict(
+            num_disp=num_disp,
+            step=step,
+            offset=step // 2,
+            support_texture=10,
+            support_ratio=0.85,
+            lr_threshold=2,
+            disp_min=0,
+        )
+        out_k = support_match_pallas(
+            dl, dr, block_rows=block, interpret=True, **kwargs
+        )
+        out_r = ref.support_match_rows_ref(dl, dr, **kwargs)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    def test_recovers_known_shift(self):
+        rng = np.random.default_rng(3)
+        shift = 5
+        dl, dr = _rand_desc_pair(rng, 4, 100, shift=shift)
+        out = np.asarray(
+            support_match_pallas(
+                dl, dr, num_disp=16, step=5, offset=2,
+                support_texture=10, support_ratio=0.85,
+                lr_threshold=2, disp_min=0, interpret=True,
+            )
+        )
+        valid = out != -1.0
+        assert valid.mean() > 0.5
+        assert np.all(out[valid][out[valid] >= 0] >= 0)
+        interior = out[:, 3:]
+        v = interior != -1.0
+        assert np.all(interior[v] == shift)
+
+
+class TestDenseMatchKernel:
+    @pytest.mark.parametrize(
+        "h,w,num_disp,c,block",
+        [
+            (8, 64, 16, 5, 4),
+            (10, 96, 32, 12, 4),   # h not divisible by block
+            (4, 48, 8, 3, 2),
+            (6, 200, 64, 25, 3),
+        ],
+    )
+    def test_matches_ref(self, h, w, num_disp, c, block):
+        rng = np.random.default_rng(h + w)
+        dl, dr = _rand_desc_pair(rng, h, w, shift=min(6, num_disp - 1))
+        mu_l = jnp.asarray(rng.uniform(0, num_disp - 1, (h, w)).astype(np.float32))
+        mu_r = jnp.asarray(rng.uniform(0, num_disp - 1, (h, w)).astype(np.float32))
+        cand_l = jnp.asarray(rng.integers(0, num_disp, (h, w, c)).astype(np.int32))
+        cand_r = jnp.asarray(rng.integers(0, num_disp, (h, w, c)).astype(np.int32))
+        kwargs = dict(
+            num_disp=num_disp, beta=0.02, gamma=3.0, sigma=1.0, match_texture=1
+        )
+        l_k, r_k = dense_match_pallas(
+            dl, dr, mu_l, mu_r, cand_l, cand_r,
+            block_rows=block, interpret=True, **kwargs,
+        )
+        l_r, r_r = ref.dense_match_rows_ref(
+            dl, dr, mu_l, mu_r, cand_l, cand_r, **kwargs
+        )
+        np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+        np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+    def test_candidate_restriction_respected(self):
+        """Output disparities must come from the candidate set."""
+        rng = np.random.default_rng(9)
+        h, w, nd = 6, 80, 32
+        dl, dr = _rand_desc_pair(rng, h, w, shift=6)
+        mu = jnp.full((h, w), 6.0)
+        cand = jnp.asarray(
+            np.broadcast_to(np.array([3, 6, 9], np.int32), (h, w, 3)).copy()
+        )
+        l, r = dense_match_pallas(
+            dl, dr, mu, mu, cand, cand,
+            num_disp=nd, beta=0.02, gamma=3.0, sigma=1.0,
+            match_texture=1, interpret=True,
+        )
+        lv = np.asarray(l)
+        assert set(np.unique(lv[lv != -1.0])) <= {3.0, 6.0, 9.0}
+
+
+class TestMedianKernel:
+    @pytest.mark.parametrize("h,w,block", [(9, 9, 4), (16, 31, 8), (7, 50, 16)])
+    def test_matches_ref(self, h, w, block):
+        rng = np.random.default_rng(h * w)
+        disp = rng.uniform(0, 64, (h, w)).astype(np.float32)
+        disp[rng.random((h, w)) < 0.2] = -1.0
+        out_k = median3x3_pallas(jnp.asarray(disp), block_rows=block, interpret=True)
+        out_r = ops.median3x3(jnp.asarray(disp), backend="ref")
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    @given(
+        hnp.arrays(
+            np.float32,
+            st.tuples(st.integers(3, 12), st.integers(3, 12)),
+            elements=st.floats(0, 64, width=32),
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_median_bounds(self, disp):
+        """Median output lies within the local window's [min, max]."""
+        out = np.asarray(median3x3_pallas(jnp.asarray(disp), interpret=True))
+        padded = np.pad(disp, 1, mode="edge")
+        h, w = disp.shape
+        for y in range(0, h, max(1, h // 3)):
+            for x in range(0, w, max(1, w // 3)):
+                win = padded[y : y + 3, x : x + 3]
+                assert win.min() - 1e-5 <= out[y, x] <= win.max() + 1e-5
+
+
+class TestCostVolumeProperties:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_diagonal_identity(self, seed):
+        """CV_R[d, u] == CV[d, u+d] wherever in range (the fusion identity
+        that lets one volume serve both views)."""
+        rng = np.random.default_rng(seed)
+        dl, dr = _rand_desc_pair(rng, 2, 40, shift=3)
+        nd = 8
+        cv = np.asarray(ref.cost_volume_rows(dl, dr, nd))
+        cvr = np.asarray(ref.diagonal_volume(jnp.asarray(cv)))
+        for d in range(nd):
+            for u in range(40 - nd):
+                assert cvr[0, d, u] == cv[0, d, u + d]
+
+    def test_cost_volume_zero_at_true_shift(self):
+        rng = np.random.default_rng(4)
+        shift = 4
+        dl, dr = _rand_desc_pair(rng, 2, 60, shift=shift)
+        cv = np.asarray(ref.cost_volume_rows(dl, dr, 8))
+        # At the true disparity the SAD must be zero for interior columns
+        # (identical texture, descriptors fully inside the copied region).
+        assert np.all(cv[:, shift, shift + 4 : -4] == 0)

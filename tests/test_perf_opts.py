@@ -1,0 +1,123 @@
+"""Correctness of the §Perf optimizations: they must change WHERE work
+happens, never WHAT is computed."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import blockwise_attention
+from repro.models.config import LayerKind, ModelConfig
+from repro.models.model import LMModel
+
+
+def _qkv(rng, b, s, h, kv, d):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    return q, k, v
+
+
+class TestCausalBlockSkip:
+    @pytest.mark.parametrize("window", [0, 48])
+    @pytest.mark.parametrize("s,cq,ck", [(128, 32, 32), (96, 32, 16), (64, 64, 16)])
+    def test_skip_matches_full_scan(self, s, cq, ck, window):
+        rng = np.random.default_rng(s + window)
+        q, k, v = _qkv(rng, 2, s, 4, 2, 16)
+        full = blockwise_attention(
+            q, k, v, window=window, q_chunk=cq, kv_chunk=ck, causal_skip=False
+        )
+        skip = blockwise_attention(
+            q, k, v, window=window, q_chunk=cq, kv_chunk=ck, causal_skip=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(full), np.asarray(skip), atol=2e-5, rtol=1e-5
+        )
+
+    def test_skip_with_offset(self):
+        """Prefill-at-offset path (cache.index > 0)."""
+        rng = np.random.default_rng(0)
+        q, k, v = _qkv(rng, 1, 64, 4, 4, 16)
+        for off in (0, 32):
+            full = blockwise_attention(
+                q, k, v, q_offset=off, q_chunk=16, kv_chunk=16,
+                causal_skip=False,
+            )
+            skip = blockwise_attention(
+                q, k, v, q_offset=off, q_chunk=16, kv_chunk=16,
+                causal_skip=True,
+            )
+            np.testing.assert_allclose(
+                np.asarray(full), np.asarray(skip), atol=2e-5, rtol=1e-5
+            )
+
+
+class TestRematNames:
+    def test_same_loss_and_grads(self):
+        base = ModelConfig(
+            name="t", family="dense", num_layers=4, d_model=64, num_heads=4,
+            num_kv_heads=2, d_ff=128, vocab_size=256, q_chunk=16, kv_chunk=16,
+            dtype="float32",
+        )
+        named = dataclasses.replace(base, remat_policy="names")
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 256)
+        batch = {"inputs": toks, "targets": jnp.zeros((2, 32), jnp.int32)}
+
+        m0, m1 = LMModel(base), LMModel(named)
+        p = m0.init(jax.random.PRNGKey(0))
+        l0, g0 = jax.value_and_grad(lambda p: m0.loss(p, batch)[0])(p)
+        l1, g1 = jax.value_and_grad(lambda p: m1.loss(p, batch)[0])(p)
+        assert float(l0) == pytest.approx(float(l1), abs=1e-6)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-4)
+
+
+class TestOptimizedConfigEndToEnd:
+    @pytest.mark.parametrize("arch", ["gemma2-27b", "deepseek-v2-lite-16b"])
+    def test_optimized_flags_same_logits(self, arch):
+        from repro.configs import get_config
+
+        cfg = get_config(arch, reduced=True)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        opt = dataclasses.replace(cfg, causal_skip=True, remat_policy="names")
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                  cfg.vocab_size)
+        m0, m1 = LMModel(cfg), LMModel(opt)
+        p = m0.init(jax.random.PRNGKey(0))
+        l0, _, _ = m0.apply(p, toks)
+        l1, _, _ = m1.apply(p, toks)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   atol=3e-4, rtol=1e-4)
+
+
+class TestCacheInsertModes:
+    def test_onehot_matches_dus_decode(self):
+        """onehot cache insert must be bit-identical to DUS for decode."""
+        from repro.models.attention import cache_insert
+
+        rng = np.random.default_rng(0)
+        buf = jnp.asarray(rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+        new = jnp.asarray(rng.standard_normal((2, 1, 4, 8)), jnp.float32)
+        for idx in (0, 7, 15):
+            a = cache_insert(buf, new, jnp.int32(idx), "dus")
+            b = cache_insert(buf, new, jnp.int32(idx), "onehot")
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_model_decode_same_under_onehot(self):
+        cfg = ModelConfig(
+            name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+            num_kv_heads=2, d_ff=128, vocab_size=256, q_chunk=16, kv_chunk=16,
+            dtype="float32",
+        )
+        oh = dataclasses.replace(cfg, cache_update="onehot")
+        m0, m1 = LMModel(cfg), LMModel(oh)
+        p = m0.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 256)
+        c0 = m0.init_caches(1, 8, dtype=jnp.float32)
+        c1 = m1.init_caches(1, 8, dtype=jnp.float32)
+        for t in range(8):
+            l0, c0, _ = m0.apply(p, toks[:, t:t+1], caches=c0)
+            l1, c1, _ = m1.apply(p, toks[:, t:t+1], caches=c1)
+            np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))

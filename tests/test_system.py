@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests for the iELAS stereo system (paper claims)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.params import SYNTHETIC_BENCH_PARAMS, ElasParams
+from repro.data.stereo import LIGHTING_CONDITIONS, synthetic_stereo_pair
+
+
+@pytest.fixture(scope="module")
+def scene():
+    il, ir, gt = synthetic_stereo_pair(height=120, width=160, d_max=40, seed=3)
+    return (
+        jnp.asarray(il, jnp.float32),
+        jnp.asarray(ir, jnp.float32),
+        jnp.asarray(gt),
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return SYNTHETIC_BENCH_PARAMS
+
+
+class TestIELASPipeline:
+    def test_output_shape_range_nonan(self, scene, params):
+        il, ir, gt = scene
+        d = np.asarray(pipeline.ielas_disparity(il, ir, params))
+        assert d.shape == il.shape
+        assert not np.any(np.isnan(d))
+        valid = d != params.invalid
+        assert valid.mean() > 0.5
+        assert d[valid].min() >= params.disp_min
+        assert d[valid].max() <= params.disp_max
+
+    def test_accuracy_reasonable(self, scene, params):
+        il, ir, gt = scene
+        d = pipeline.ielas_disparity(il, ir, params)
+        bad = float(pipeline.bad_pixel_rate(d, gt))
+        assert bad < 0.35, f"bad-pixel rate {bad} out of range"
+
+    def test_single_jit_program(self, scene, params):
+        """The iELAS path must be one fused XLA program (the paper's
+        'fully accelerated on FPGA' claim translated): tracing it must not
+        fall back to host callbacks."""
+        il, ir, _ = scene
+        lowered = jax.jit(
+            pipeline.ielas_disparity, static_argnames=("p",)
+        ).lower(il, ir, params)
+        text = lowered.as_text()
+        assert "custom_call_target=\"xla_python_cpu_callback\"" not in text
+
+    def test_deterministic(self, scene, params):
+        il, ir, _ = scene
+        d1 = np.asarray(pipeline.ielas_disparity(il, ir, params))
+        d2 = np.asarray(pipeline.ielas_disparity(il, ir, params))
+        np.testing.assert_array_equal(d1, d2)
+
+    def test_batched_vmap(self, params):
+        frames = [
+            synthetic_stereo_pair(height=60, width=80, d_max=24, seed=s)
+            for s in range(3)
+        ]
+        il = jnp.stack([jnp.asarray(f[0], jnp.float32) for f in frames])
+        ir = jnp.stack([jnp.asarray(f[1], jnp.float32) for f in frames])
+        batched = jax.vmap(lambda a, b: pipeline.ielas_disparity(a, b, params))
+        out = np.asarray(batched(il, ir))
+        assert out.shape == (3, 60, 80)
+        assert not np.any(np.isnan(out))
+
+
+class TestPaperClaims:
+    """Table I / Table III structure: interpolated ELAS is competitive with
+    the original (host-Delaunay) algorithm across lighting conditions."""
+
+    def test_interpolated_vs_baseline_accuracy(self, scene, params):
+        il, ir, gt = scene
+        d_i = pipeline.ielas_disparity(il, ir, params)
+        d_b = pipeline.elas_baseline_disparity(il, ir, params)
+        bad_i = float(pipeline.bad_pixel_rate(d_i, gt))
+        bad_b = float(pipeline.bad_pixel_rate(d_b, gt))
+        # Paper: interpolated is within ~1.5x of original accuracy (Tab. III
+        # shows 7.7% vs 6.4%); on our scenes it is usually BETTER (Tab. I).
+        assert bad_i <= bad_b * 1.5 + 0.02
+
+    @pytest.mark.parametrize("lighting", sorted(LIGHTING_CONDITIONS))
+    def test_all_lighting_conditions_run(self, lighting, params):
+        il, ir, gt = synthetic_stereo_pair(
+            height=80, width=120, d_max=32, lighting=lighting, seed=5
+        )
+        d = pipeline.ielas_disparity(
+            jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32), params
+        )
+        err = float(pipeline.disparity_error(d, jnp.asarray(gt)))
+        assert np.isfinite(err)
+        assert err < 0.6
+
+
+class TestMetrics:
+    def test_disparity_error_eq1(self):
+        gt = jnp.asarray([[10.0, 20.0]])
+        d = jnp.asarray([[11.0, 18.0]])
+        err = float(pipeline.disparity_error(d, gt))
+        assert err == pytest.approx((0.1 + 0.1) / 2)
+
+    def test_invalid_counts_as_bad(self):
+        gt = jnp.asarray([[10.0, 10.0]])
+        d = jnp.asarray([[-1.0, 10.0]])
+        assert float(pipeline.bad_pixel_rate(d, gt)) == pytest.approx(0.5)
