@@ -28,6 +28,9 @@ def main() -> None:
     if want("table4"):
         from benchmarks import table4_throughput
         table4_throughput.run()
+    if want("table5"):
+        from benchmarks import table5_multistream
+        table5_multistream.run()
     if want("lm"):
         from benchmarks import lm_steps
         lm_steps.run()

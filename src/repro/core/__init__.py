@@ -4,7 +4,10 @@ from repro.core.pipeline import (  # noqa: F401
     bad_pixel_rate,
     disparity_error,
     elas_baseline_disparity,
+    ielas_dense_stage,
     ielas_disparity,
+    ielas_interpolate_stage,
+    ielas_support_stage,
 )
 from repro.core.interpolation import interpolate_support  # noqa: F401
 from repro.core.support import INVALID, support_from_images  # noqa: F401

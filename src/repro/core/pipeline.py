@@ -1,4 +1,4 @@
-"""End-to-end stereo pipelines.
+"""End-to-end stereo pipelines and the public frame-stage API.
 
 Two paths, mirroring the paper's Table III/IV comparison:
 
@@ -9,6 +9,21 @@ Two paths, mirroring the paper's Table III/IV comparison:
   sparse support points round-trip to the HOST for irregular Delaunay
   triangulation, then dense matching resumes on device.  The host hop is the
   cost the paper eliminates.
+
+The frame program also splits at a stable seam, mirroring the FPGA module
+boundary between the support-point subsystem and the dense-matching
+datapath (paper Fig. 3):
+
+* :func:`ielas_support_stage` -- descriptors + sparse filtered support;
+* :func:`ielas_interpolate_stage` -- the paper's regularized interpolation
+  (the iELAS step) completing the support grid;
+* :func:`ielas_dense_stage` -- plane prior, grid vectors, dense matching
+  for both views, post-processing.
+
+The serving engine (:mod:`repro.serving.stereo_service`) compiles the
+support and dense halves as separate wave programs so consecutive waves
+overlap across stages — the service-level analogue of the paper's
+ping-pong BRAMs.
 """
 from __future__ import annotations
 
@@ -31,7 +46,7 @@ from repro.core.prior import plane_prior, right_view_support
 from repro.core.support import extract_support_grid
 
 
-def _dense_stage(
+def ielas_dense_stage(
     dl: jax.Array,
     dr: jax.Array,
     support_left: jax.Array,   # complete (interpolated) left-view support grid
@@ -54,27 +69,29 @@ def _dense_stage(
     return postprocess(disp_l, disp_r, p)
 
 
+def ielas_interpolate_stage(support: jax.Array, p: ElasParams) -> jax.Array:
+    """THE iELAS step: regularized interpolation completing the support grid."""
+    return interpolate_support(support, p)
+
+
 @functools.partial(jax.jit, static_argnames=("p", "backend"))
 def ielas_disparity(
     img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
 ) -> jax.Array:
     """iELAS: fully on-device, single static XLA program. (H, W) float32."""
+    dl, dr, support = ielas_support_stage(img_left, img_right, p, backend=backend)
+    support = ielas_interpolate_stage(support, p)
+    return ielas_dense_stage(dl, dr, support, p, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend"))
+def ielas_support_stage(
+    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Front half (descriptors + filtered sparse support); also the baseline's."""
     dl = desc_mod.extract(img_left)
     dr = desc_mod.extract(img_right)
     support = extract_support_grid(dl, dr, p, backend=backend)
-    support = filter_support(support, p)
-    support = interpolate_support(support, p)          # THE iELAS step
-    return _dense_stage(dl, dr, support, p, backend=backend)
-
-
-@functools.partial(jax.jit, static_argnames=("p",))
-def ielas_support_stage(
-    img_left: jax.Array, img_right: jax.Array, p: ElasParams
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Front half (descriptors + filtered sparse support) shared by baseline."""
-    dl = desc_mod.extract(img_left)
-    dr = desc_mod.extract(img_right)
-    support = extract_support_grid(dl, dr, p)
     support = filter_support(support, p)
     return dl, dr, support
 

@@ -121,9 +121,13 @@ def logical_to_spec(
 
 
 def _current_mesh() -> Optional[Mesh]:
-    env_mesh = jax.sharding.get_abstract_mesh()
-    if env_mesh is not None and env_mesh.shape_tuple:
-        return env_mesh
+    # jax >= 0.5 exposes the ambient mesh as jax.sharding.get_abstract_mesh;
+    # older releases only have the thread-local resource env.  Support both.
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract_mesh is not None:
+        env_mesh = get_abstract_mesh()
+        if env_mesh is not None and env_mesh.shape_tuple:
+            return env_mesh
     try:
         from jax._src.mesh import thread_resources
 

@@ -1,8 +1,17 @@
 """Pallas TPU kernels for the iELAS compute hot spots.
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
-validated in interpret mode against the pure-jnp oracles in ref.py;
-ops.py provides the jit'd public wrappers.
+validated in interpret mode against the pure-jnp oracles in ref.py.
+ops.py provides the jit'd public wrappers; implementations are looked up
+in the kernel backend registry (registry.py), so a backend is selected
+by name once ("ref" | "pallas" | "pallas_tpu") instead of string-compared
+inside every wrapper — and new backends plug in via register_backend().
 """
 from repro.kernels.ops import dense_match, median3x3, sobel, support_match  # noqa: F401
+from repro.kernels.registry import (  # noqa: F401
+    KernelBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401

@@ -1,14 +1,18 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the kernel backends.
 
-``backend`` selects the implementation:
+``backend`` names an entry in the kernel registry (:mod:`repro.kernels.registry`):
+
   * ``"ref"``     -- the pure-jnp oracle math (default on CPU: identical
                      semantics, fast under XLA:CPU).
-  * ``"pallas"``  -- the Pallas kernels; ``interpret=True`` executes the
-                     kernel bodies in Python on CPU (correctness mode),
-                     ``interpret=False`` compiles for TPU.
+  * ``"pallas"``  -- the Pallas kernels with ``interpret=True`` (kernel
+                     bodies execute in Python on CPU -- correctness mode).
+  * ``"pallas_tpu"`` -- the Pallas kernels compiled for TPU.
 
 Core pipeline code calls these wrappers, so switching the whole stereo
-system between oracle and kernel execution is one flag.
+system between oracle and kernel execution is one registry name.  The name
+stays a jit-static string; the wrapper resolves it to a
+:class:`~repro.kernels.registry.KernelBackend` at trace time and dispatches
+through the registry rather than an if/elif ladder per op.
 """
 from __future__ import annotations
 
@@ -22,25 +26,71 @@ from repro.core.params import ElasParams
 from repro.kernels import ref
 from repro.kernels.dense_match import dense_match_pallas
 from repro.kernels.median import median3x3_pallas
+from repro.kernels.registry import (
+    KernelBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.kernels.sobel import sobel_pallas
 from repro.kernels.support_match import support_match_pallas
 
 Backend = Literal["ref", "pallas", "pallas_tpu"]
 
 
-def _interpret(backend: Backend) -> bool:
-    return backend != "pallas_tpu"
+# --------------------------------------------------------------- ref backend
+def _sobel_ref(image: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h, w = image.shape
+    padded = jnp.pad(image.astype(jnp.int32), 1, mode="edge")
+    return ref.sobel_rows_ref(
+        padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
+    )
 
 
+def _median3x3_ref(disp: jax.Array) -> jax.Array:
+    h, w = disp.shape
+    padded = jnp.pad(disp, 1, mode="edge")
+    return ref.median3x3_rows_ref(
+        padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
+    )
+
+
+register_backend(KernelBackend(
+    name="ref",
+    sobel=_sobel_ref,
+    support_match=ref.support_match_rows_ref,
+    dense_match=ref.dense_match_rows_ref,
+    median3x3=_median3x3_ref,
+    description="pure-jnp oracle math (XLA:CPU friendly)",
+))
+
+
+# ------------------------------------------------------------ pallas backends
+def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBackend:
+    return KernelBackend(
+        name=name,
+        sobel=functools.partial(sobel_pallas, interpret=interpret),
+        support_match=functools.partial(support_match_pallas, interpret=interpret),
+        dense_match=functools.partial(dense_match_pallas, interpret=interpret),
+        median3x3=functools.partial(median3x3_pallas, interpret=interpret),
+        description=description,
+    )
+
+
+register_backend(_pallas_backend(
+    "pallas", interpret=True,
+    description="Pallas kernels, interpret mode (CPU correctness)",
+))
+register_backend(_pallas_backend(
+    "pallas_tpu", interpret=False,
+    description="Pallas kernels compiled for TPU",
+))
+
+
+# -------------------------------------------------------------- public wrappers
 @functools.partial(jax.jit, static_argnames=("backend",))
 def sobel(image: jax.Array, backend: Backend = "ref") -> tuple[jax.Array, jax.Array]:
-    if backend == "ref":
-        h, w = image.shape
-        padded = jnp.pad(image.astype(jnp.int32), 1, mode="edge")
-        return ref.sobel_rows_ref(
-            padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
-        )
-    return sobel_pallas(image, interpret=_interpret(backend))
+    return get_backend(backend).sobel(image)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend"))
@@ -50,7 +100,9 @@ def support_match(
     p: ElasParams,
     backend: Backend = "ref",
 ) -> jax.Array:
-    kwargs = dict(
+    return get_backend(backend).support_match(
+        desc_l_rows,
+        desc_r_rows,
         num_disp=p.num_disp,
         step=p.candidate_step,
         offset=p.candidate_step // 2,
@@ -58,11 +110,6 @@ def support_match(
         support_ratio=p.support_ratio,
         lr_threshold=p.lr_threshold,
         disp_min=p.disp_min,
-    )
-    if backend == "ref":
-        return ref.support_match_rows_ref(desc_l_rows, desc_r_rows, **kwargs)
-    return support_match_pallas(
-        desc_l_rows, desc_r_rows, interpret=_interpret(backend), **kwargs
     )
 
 
@@ -77,29 +124,16 @@ def dense_match(
     p: ElasParams,
     backend: Backend = "ref",
 ) -> tuple[jax.Array, jax.Array]:
-    kwargs = dict(
+    return get_backend(backend).dense_match(
+        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
         num_disp=p.num_disp,
         beta=p.beta,
         gamma=p.gamma,
         sigma=p.sigma,
         match_texture=p.match_texture,
     )
-    if backend == "ref":
-        return ref.dense_match_rows_ref(
-            desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, **kwargs
-        )
-    return dense_match_pallas(
-        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
-        interpret=_interpret(backend), **kwargs,
-    )
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def median3x3(disp: jax.Array, backend: Backend = "ref") -> jax.Array:
-    if backend == "ref":
-        h, w = disp.shape
-        padded = jnp.pad(disp, 1, mode="edge")
-        return ref.median3x3_rows_ref(
-            padded[0:h, :], padded[1 : h + 1, :], padded[2 : h + 2, :]
-        )
-    return median3x3_pallas(disp, interpret=_interpret(backend))
+    return get_backend(backend).median3x3(disp)

@@ -1,0 +1,75 @@
+"""Kernel backend registry.
+
+Historically the backend choice travelled through the stereo stack as a bare
+string compared against literals inside every wrapper (``if backend ==
+"ref": ...``).  The registry replaces that string-threading with a first-class
+object: a :class:`KernelBackend` bundles one implementation of each compute
+hot spot (sobel, support match, dense match, median), and call sites resolve
+the name exactly once via :func:`get_backend`.
+
+The *name* remains the unit that crosses jit boundaries — strings are
+hashable and stable, so ``backend: str`` stays a ``static_argnames`` entry —
+but dispatch inside the traced function is a registry lookup, not an if/elif
+ladder.  Adding a backend (e.g. a future Mosaic or GPU variant) is a single
+:func:`register_backend` call; every wrapper, pipeline stage, and the serving
+engine picks it up with no further edits.
+
+Built-in backends (registered by :mod:`repro.kernels.ops` on import):
+
+* ``ref``         -- pure-jnp oracle math (default on CPU).
+* ``pallas``      -- Pallas kernels in interpret mode (correctness on CPU).
+* ``pallas_tpu``  -- Pallas kernels compiled for TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """One implementation of each iELAS compute hot spot.
+
+    The callables use keyword-exploded algorithm parameters (not
+    ``ElasParams``) so each backend stays importable without the core
+    package and trivially testable against the others.
+    """
+
+    name: str
+    sobel: Callable            # (image) -> (gx, gy)
+    support_match: Callable    # (desc_l_rows, desc_r_rows, **kw) -> grid
+    dense_match: Callable      # (dl, dr, mu_l, mu_r, cand_l, cand_r, **kw)
+    median3x3: Callable        # (disp) -> disp
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("backend name must be non-empty")
+
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+
+
+def register_backend(backend: KernelBackend, *, overwrite: bool = False) -> KernelBackend:
+    """Add a backend to the registry; ``overwrite=True`` replaces an entry."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"kernel backend {backend.name!r} already registered "
+            f"(pass overwrite=True to replace)"
+        )
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> KernelBackend:
+    """Resolve a backend name; raises with the available names on a miss."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

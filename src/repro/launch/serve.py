@@ -1,9 +1,9 @@
-"""Serving launchers: LM generation and the iELAS stereo service.
+"""Serving launchers: LM generation and the continuous-batching stereo service.
 
   PYTHONPATH=src python -m repro.launch.serve lm --arch yi-9b --reduced \\
       --requests 4 --prompt-len 16 --max-new 24
-  PYTHONPATH=src python -m repro.launch.serve stereo --frames 8 --height 120 \\
-      --width 160
+  PYTHONPATH=src python -m repro.launch.serve stereo --frames 8 --batch 4 \\
+      --height 120 --width 160
 """
 from __future__ import annotations
 
@@ -48,17 +48,29 @@ def serve_lm(args) -> int:
 
 def serve_stereo(args) -> int:
     p = SYNTH.params
-    svc = StereoService(p, depth=2).start()
-    frames = (
+    svc = StereoService(p, batch=args.batch, depth=2,
+                        max_pending=max(64, args.frames)).start()
+    svc.warmup([(args.height, args.width)])
+    frames = [
         synthetic_stereo_pair(height=args.height, width=args.width,
                               d_max=40, seed=s)[:2]
         for s in range(args.frames)
-    )
-    results, wall = svc.run_stream(frames, args.frames)
+    ]
+    # submit everything up front so waves fill to `batch` (a serial
+    # submit-then-wait loop would dispatch padded single-frame waves)
+    t0 = time.monotonic()
+    for i, (l, r) in enumerate(frames):
+        svc.submit(i, l, r)
+    results = svc.results(args.frames, timeout=600.0)
+    wall = time.monotonic() - t0
+    st = svc.stats()
     svc.stop()
-    fps = args.frames / wall
+    fps = len(results) / wall
     print(f"{args.frames} frames in {wall:.2f}s -> {fps:.1f} fps "
-          f"({args.height}x{args.width}, CPU backend)")
+          f"({args.height}x{args.width}, batch={args.batch}, CPU backend)")
+    print(f"waves={st.waves} occupancy={st.wave_occupancy:.2f} "
+          f"cache={st.cache_hits}h/{st.cache_misses}m "
+          f"p95={st.latency_p95_ms:.0f}ms")
     return 0
 
 
@@ -76,6 +88,7 @@ def main(argv=None) -> int:
 
     st = sub.add_parser("stereo")
     st.add_argument("--frames", type=int, default=8)
+    st.add_argument("--batch", type=int, default=1)
     st.add_argument("--height", type=int, default=120)
     st.add_argument("--width", type=int, default=160)
 

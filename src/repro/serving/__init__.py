@@ -1,2 +1,7 @@
 from repro.serving.engine import ServeEngine  # noqa: F401
-from repro.serving.stereo_service import StereoService  # noqa: F401
+from repro.serving.stereo_service import (  # noqa: F401
+    CompletedFrame,
+    FrameProgramCache,
+    ServiceStats,
+    StereoService,
+)

@@ -1,99 +1,621 @@
-"""Stereo serving: the paper's frame pipeline as a service.
+"""Continuous-batching stereo serving engine.
 
 The FPGA design overlaps frame i's compute with frame i+1's arrival via
-ping-pong BRAMs (Fig. 7).  The service-level equivalent: a two-deep frame
-queue feeding a vmapped iELAS program, so host frame ingest (the producer)
-overlaps device compute (the consumer) -- throughput ~2x over strict
-serialisation, same as the paper's claim for its mechanism.
+ping-pong BRAMs (paper Fig. 7), and the regularized interpolation step makes
+the whole frame one static program.  This module is the service-level
+generalisation of both ideas for many concurrent streams:
+
+* **Dynamic wave assembly** -- requests from any number of streams are
+  grouped into *waves* of up to ``batch`` frames.  A partial wave is padded
+  (slots replicate a real frame) and masked at emit time rather than
+  stalled, so a single slow stream never blocks the others.  Within a
+  resolution bucket, wave order is submission order, so each stream's
+  results come back in the order it submitted them.
+
+* **Frame-program cache** -- compiled wave programs are cached per
+  ``(H, W, batch, backend, params)``; with ``bucket > 1`` resolutions are
+  rounded up to bucket multiples (inputs edge-padded, outputs cropped) so
+  mixed-resolution traffic collapses onto a few programs.  ``warmup()``
+  pre-compiles; :class:`ServiceStats` reports hits/misses, so "zero
+  recompiles after warm-up" is an assertable property.
+
+* **Staged async pipeline** -- ingest/assembly, the support stage
+  (descriptors + sparse support + the paper's interpolation), the dense
+  stage (prior + dense matching + post-processing) and emit each run on
+  their own thread connected by bounded queues of depth ``depth``.  Host
+  ingest of wave i+1 overlaps device compute of wave i -- the ping-pong
+  BRAM, at wave granularity.  The stage seam is the public API of
+  :mod:`repro.core.pipeline` (``ielas_support_stage`` /
+  ``ielas_interpolate_stage`` / ``ielas_dense_stage``), the same module
+  boundary as the paper's Fig. 3 subsystems.
+
+* **Accounting** -- per-request latency, wave occupancy, backpressure time
+  spent blocked in ``submit()``, and program-cache counters, snapshotted by
+  :meth:`StereoService.stats`.
+
+The split wave programs produce *bitwise identical* output to the fused
+single-frame :func:`~repro.core.pipeline.ielas_disparity` program (pinned by
+tests/test_stereo_serving.py), so batching is purely a throughput decision.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import math
 import queue
 import threading
 import time
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.params import ElasParams
-from repro.core.pipeline import ielas_disparity
+from repro.core.pipeline import (
+    ielas_dense_stage,
+    ielas_interpolate_stage,
+    ielas_support_stage,
+)
+
+_EOS = object()          # end-of-stream sentinel flowing through the stages
 
 
-class StereoService:
-    def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
-                 backend: str = "ref"):
+# ---------------------------------------------------------------------------
+# public result / stats types
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompletedFrame:
+    """One finished request, as delivered by :meth:`StereoService.collect`."""
+
+    request_id: int
+    stream_id: int
+    frame_id: int
+    disparity: np.ndarray          # (H, W) float32, native resolution
+    latency_s: float               # submit() -> emitted
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    """Point-in-time snapshot of the engine's accounting."""
+
+    submitted: int
+    completed: int
+    dropped: int                   # discarded by stop(drain=False)
+    pending: int                   # submitted - completed - dropped
+    waves: int
+    padded_slots: int              # batch slots filled by padding, not work
+    wave_occupancy: float          # real frames / (waves * batch)
+    cache_hits: int
+    cache_misses: int              # == wave programs compiled
+    programs_cached: int
+    backpressure_seconds: float    # total time submit() spent blocked
+    latency_avg_ms: float
+    latency_p50_ms: float
+    latency_p95_ms: float
+    latency_max_ms: float
+    throughput_fps: float          # completed / (last emit - first submit)
+
+
+# ---------------------------------------------------------------------------
+# frame-program cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WavePrograms:
+    """The two compiled halves of one wave-shaped frame program."""
+
+    key: tuple                     # (H, W) bucketed
+    support: object                # (B,H,W)x2 -> (dl, dr, interpolated support)
+    dense: object                  # (dl, dr, support) -> (B,H,W) disparity
+
+
+class FrameProgramCache:
+    """Compiled wave programs keyed on ``(H, W)`` under fixed
+    ``(batch, backend, params)``, with optional resolution bucketing.
+
+    With ``bucket > 1`` a request's resolution is rounded up to the next
+    bucket multiple, so nearby resolutions share one program (inputs are
+    edge-padded on ingest and outputs cropped on emit; with the default
+    ``bucket=1`` results are exact).  ``hits``/``misses`` count :meth:`get`
+    resolutions; a miss is exactly one new program compilation, so a warmed
+    cache serving repeated resolutions shows ``misses == 0``.
+    """
+
+    def __init__(self, params: ElasParams, batch: int, backend: str,
+                 bucket: int = 1):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if bucket < 1:
+            raise ValueError(f"bucket must be >= 1, got {bucket}")
         self.params = params
         self.batch = batch
-        self._in: queue.Queue = queue.Queue(maxsize=depth)   # ping-pong depth
-        self._out: queue.Queue = queue.Queue()
-        self._stop = threading.Event()
-        self._worker: Optional[threading.Thread] = None
-        self.frames_processed = 0
+        self.backend = backend
+        self.bucket = bucket
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+        self._programs: dict[tuple, WavePrograms] = {}
 
-        if batch > 1:
-            fn = jax.vmap(lambda l, r: ielas_disparity(l, r, params, backend))
-        else:
-            fn = lambda l, r: ielas_disparity(l, r, params, backend)
-        self._fn = jax.jit(fn)
+    def bucket_shape(self, h: int, w: int) -> tuple[int, int]:
+        b = self.bucket
+        return (math.ceil(h / b) * b, math.ceil(w / b) * b)
 
-    # ------------------------------------------------------------ lifecycle
-    def start(self):
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
-        return self
+    def __len__(self) -> int:
+        return len(self._programs)
 
-    def _run(self):
-        while not self._stop.is_set():
-            try:
-                item = self._in.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            frame_id, left, right = item
-            disp = self._fn(left, right)
-            disp.block_until_ready()
-            self.frames_processed += 1
-            self._out.put((frame_id, np.asarray(disp)))
+    def get(self, h: int, w: int) -> WavePrograms:
+        """Resolve the wave program for a *bucketed* shape, compiling on miss."""
+        key = (h, w)
+        with self._lock:
+            prog = self._programs.get(key)
+            if prog is not None:
+                self.hits += 1
+                return prog
+            self.misses += 1
+            prog = self._build(key)
+            self._programs[key] = prog
+            return prog
 
-    def stop(self):
-        self._stop.set()
-        if self._worker is not None:
-            self._worker.join(timeout=5)
+    def warm(self, h: int, w: int) -> WavePrograms:
+        """Pre-compile the program for (h, w) without touching hit/miss
+        counters, and force actual XLA compilation with a dummy wave."""
+        key = self.bucket_shape(h, w)
+        with self._lock:
+            prog = self._programs.get(key)
+            if prog is None:
+                prog = self._build(key)
+                self._programs[key] = prog
+        zeros = jnp.zeros((self.batch, *key), jnp.float32)
+        dl, dr, sup = prog.support(zeros, zeros)
+        prog.dense(dl, dr, sup).block_until_ready()
+        return prog
 
-    # ------------------------------------------------------------------ api
-    def submit(self, frame_id: int, left: np.ndarray, right: np.ndarray):
-        """Blocks only when ``depth`` frames are already in flight --
-        the ping-pong backpressure point."""
-        self._in.put(
-            (frame_id, jnp.asarray(left, jnp.float32), jnp.asarray(right, jnp.float32))
+    def _build(self, key: tuple) -> WavePrograms:
+        p, backend = self.params, self.backend
+
+        def support_one(left, right):
+            dl, dr, sup = ielas_support_stage(left, right, p, backend=backend)
+            return dl, dr, ielas_interpolate_stage(sup, p)
+
+        def dense_one(dl, dr, sup):
+            return ielas_dense_stage(dl, dr, sup, p, backend=backend)
+
+        return WavePrograms(
+            key=key,
+            support=jax.jit(jax.vmap(support_one)),
+            dense=jax.jit(jax.vmap(dense_one)),
         )
 
-    def results(self, n: int, timeout: float = 60.0) -> list[tuple[int, np.ndarray]]:
-        out = []
+
+# ---------------------------------------------------------------------------
+# internal request / wave records
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Request:
+    request_id: int
+    stream_id: int
+    frame_id: int
+    left: np.ndarray
+    right: np.ndarray
+    h: int
+    w: int
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _Wave:
+    key: tuple                     # bucketed (H, W)
+    requests: list                 # valid slots, in submission order
+    left: object                   # (B, H, W) device array
+    right: object
+    programs: Optional[WavePrograms] = None
+    mid: Optional[tuple] = None    # (dl, dr, support) between stages
+    disp: object = None
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class StereoService:
+    """Continuous-batching stereo disparity service.
+
+    Parameters
+    ----------
+    params:      algorithm parameters (jit-static; part of the program key).
+    batch:       wave width -- max frames fused into one device program.
+    depth:       bound of each inter-stage queue (2 == ping-pong).
+    backend:     kernel registry name ("ref" | "pallas" | "pallas_tpu").
+    bucket:      resolution bucketing multiple (1 == exact shapes only).
+    wave_linger: how long assembly waits to fill a partial wave before
+                 dispatching it padded (seconds).
+    max_pending: ingest queue bound; submit() blocks beyond this
+                 (the backpressure point, measured in stats).
+    """
+
+    def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
+                 backend: str = "ref", bucket: int = 1,
+                 wave_linger: float = 0.002, max_pending: int = 64):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.params = params
+        self.batch = batch
+        self.depth = depth
+        self.backend = backend
+        self.wave_linger = wave_linger
+        self._cache = FrameProgramCache(params, batch, backend, bucket=bucket)
+
+        self._ingest: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._waves: queue.Queue = queue.Queue(maxsize=depth)
+        self._mid: queue.Queue = queue.Queue(maxsize=depth)
+        self._ready: queue.Queue = queue.Queue(maxsize=depth)
+        self._out: queue.Queue = queue.Queue()
+
+        self._drain = threading.Event()    # finish queued work, then stop
+        self._abort = threading.Event()    # stop now, discard queued work
+        self._done = threading.Event()     # emitter saw EOS
+        self._threads: list[threading.Thread] = []
+        self._error: Optional[BaseException] = None
+
+        self._slock = threading.Lock()
+        self._next_request_id = 0
+        self._submitted = 0
+        self._completed = 0
+        self._dropped = 0
+        self._waves_built = 0
+        self._padded_slots = 0
+        self._backpressure_s = 0.0
+        self._latencies: collections.deque = collections.deque(maxlen=4096)
+        self._lat_sum = 0.0
+        self._lat_max = 0.0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_emit: Optional[float] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "StereoService":
+        if self._threads:
+            raise RuntimeError("service already started")
+        # restart after stop(): reset lifecycle state so the stage loops run.
+        # Requests still in the ingest queue are served now; waves stranded in
+        # the stage queues by an aborted stop lost their host frames already
+        # and stay dropped -- discard them (and any stale _EOS sentinel) so
+        # the fresh stage threads don't consume a poisoned pipeline.
+        self._drain.clear()
+        self._abort.clear()
+        self._done.clear()
+        self._error = None
+        for q in (self._waves, self._mid, self._ready):
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+        with self._slock:
+            self._dropped = max(
+                0, self._submitted - self._completed - self._ingest.qsize()
+            )
+        stages = [
+            ("stereo-assemble", self._assemble_loop),
+            ("stereo-support", self._support_loop),
+            ("stereo-dense", self._dense_loop),
+            ("stereo-emit", self._emit_loop),
+        ]
+        for name, target in stages:
+            t = threading.Thread(target=self._guard(target), name=name,
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 120.0) -> None:
+        """Shut down.  ``drain=True`` finishes all queued work first;
+        ``drain=False`` discards queued work (counted as ``dropped``) and
+        returns as soon as the stage threads exit."""
+        if not self._threads:
+            return
+        if drain and self._error is None:
+            self._drain.set()
+            self._done.wait(timeout)
+        self._abort.set()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        self._threads = []
+        with self._slock:
+            self._dropped = self._submitted - self._completed
+        if self._error is not None:
+            raise RuntimeError("stereo service worker failed") from self._error
+
+    def __enter__(self) -> "StereoService":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        try:
+            self.stop(drain=exc_type is None)
+        except RuntimeError:
+            if exc_type is None:    # don't mask the exception already in flight
+                raise
+
+    def _guard(self, target):
+        def run():
+            try:
+                target()
+            except BaseException as e:            # noqa: BLE001
+                self._error = e
+                self._abort.set()
+                self._done.set()
+        return run
+
+    # ------------------------------------------------------------------ api
+    def warmup(self, shapes: Sequence[tuple[int, int]]) -> None:
+        """Pre-compile wave programs for the given (H, W) resolutions."""
+        for h, w in shapes:
+            self._cache.warm(h, w)
+
+    def submit(self, frame_id: int, left: np.ndarray, right: np.ndarray,
+               stream_id: int = 0) -> int:
+        """Enqueue one stereo pair; returns the request id.
+
+        Blocks only when ``max_pending`` requests are already in flight --
+        the backpressure point (time spent blocked is accounted in
+        :meth:`stats`)."""
+        if self._error is not None:
+            raise RuntimeError("stereo service worker failed") from self._error
+        left = np.asarray(left, np.float32)
+        right = np.asarray(right, np.float32)
+        if left.shape != right.shape or left.ndim != 2:
+            raise ValueError(
+                f"expected matching (H, W) pairs, got {left.shape} vs {right.shape}"
+            )
+        min_dim = max(self.params.grid_size, self.params.candidate_step)
+        if left.shape[0] < min_dim or left.shape[1] < min_dim:
+            raise ValueError(
+                f"frame {left.shape} too small: needs at least one "
+                f"{min_dim}x{min_dim} grid cell (grid_size={self.params.grid_size})"
+            )
+        now = time.monotonic()
+        with self._slock:
+            rid = self._next_request_id
+            self._next_request_id += 1
+            if self._t_first_submit is None:
+                self._t_first_submit = now
+        req = _Request(
+            request_id=rid, stream_id=stream_id, frame_id=frame_id,
+            left=left, right=right, h=left.shape[0], w=left.shape[1],
+            t_submit=now,
+        )
+        t0 = time.monotonic()
+        while True:     # abort-aware put: never deadlock on a dead service
+            if self._error is not None:
+                raise RuntimeError(
+                    "stereo service worker failed") from self._error
+            try:
+                self._ingest.put(req, timeout=0.05)
+                break
+            except queue.Full:
+                if not self._threads:
+                    raise RuntimeError(
+                        "ingest queue full and service not running"
+                    ) from None
+        waited = time.monotonic() - t0
+        with self._slock:
+            self._submitted += 1
+            self._backpressure_s += waited
+        return rid
+
+    def collect(self, n: int, timeout: float = 60.0) -> list[CompletedFrame]:
+        """Up to ``n`` completed frames, waiting at most ``timeout``."""
+        out: list[CompletedFrame] = []
         deadline = time.monotonic() + timeout
         while len(out) < n and time.monotonic() < deadline:
             try:
-                out.append(self._out.get(timeout=0.2))
-            except queue.Empty:
+                out.append(self._out.get(timeout=0.05))
                 continue
+            except queue.Empty:
+                pass
+            # only surface a worker failure once finished frames are drained
+            if self._error is not None:
+                raise RuntimeError("stereo service worker failed") from self._error
         return out
 
+    def results(self, n: int, timeout: float = 60.0) -> list[tuple[int, np.ndarray]]:
+        """Compatibility shim: ``(frame_id, disparity)`` tuples."""
+        return [(c.frame_id, c.disparity) for c in self.collect(n, timeout)]
+
     def run_stream(
-        self, frames: Iterator[tuple[np.ndarray, np.ndarray]], n_frames: int
+        self, frames: Iterator[tuple[np.ndarray, np.ndarray]], n_frames: int,
+        timeout: float = 600.0,
     ) -> tuple[list, float]:
-        """Process a stream; returns (results, wall_seconds)."""
+        """Process a single stream; returns ``((frame_id, disp) list, wall_s)``.
+
+        Returns whatever completed within ``timeout`` (possibly fewer than
+        ``n_frames``) rather than blocking forever on a lost frame."""
         t0 = time.monotonic()
+        deadline = t0 + timeout
         submitted = 0
         results: list = []
         it = iter(frames)
-        while len(results) < n_frames:
+        while len(results) < n_frames and time.monotonic() < deadline:
             if submitted < n_frames:
                 try:
-                    l, r = next(it)
-                    self.submit(submitted, l, r)
+                    left, right = next(it)
+                    self.submit(submitted, left, right)
                     submitted += 1
                 except StopIteration:
-                    pass
-            results.extend(self.results(1, timeout=0.01))
+                    submitted = n_frames
+            results.extend(self.results(
+                1, timeout=0.01 if submitted < n_frames
+                else max(0.0, min(1.0, deadline - time.monotonic()))
+            ))
         return results, time.monotonic() - t0
+
+    def stats(self) -> ServiceStats:
+        with self._slock:
+            lats = sorted(self._latencies)
+            n = len(lats)
+            avg = (self._lat_sum / self._completed) if self._completed else 0.0
+            p50 = lats[n // 2] if n else 0.0
+            p95 = lats[min(n - 1, int(n * 0.95))] if n else 0.0
+            span = (
+                (self._t_last_emit - self._t_first_submit)
+                if self._t_last_emit is not None and self._t_first_submit is not None
+                else 0.0
+            )
+            return ServiceStats(
+                submitted=self._submitted,
+                completed=self._completed,
+                dropped=self._dropped,
+                pending=self._submitted - self._completed - self._dropped,
+                waves=self._waves_built,
+                padded_slots=self._padded_slots,
+                wave_occupancy=(
+                    1.0 - self._padded_slots / (self._waves_built * self.batch)
+                    if self._waves_built else 0.0
+                ),
+                cache_hits=self._cache.hits,
+                cache_misses=self._cache.misses,
+                programs_cached=len(self._cache),
+                backpressure_seconds=self._backpressure_s,
+                latency_avg_ms=avg * 1e3,
+                latency_p50_ms=p50 * 1e3,
+                latency_p95_ms=p95 * 1e3,
+                latency_max_ms=self._lat_max * 1e3,
+                throughput_fps=(self._completed / span) if span > 0 else 0.0,
+            )
+
+    # ------------------------------------------------------- stage plumbing
+    def _put(self, q: queue.Queue, item) -> bool:
+        while not self._abort.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _get(self, q: queue.Queue):
+        while not self._abort.is_set():
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+        return None
+
+    # --------------------------------------------------- stage 0: assembly
+    def _assemble_loop(self) -> None:
+        pending: collections.deque = collections.deque()
+        while not self._abort.is_set():
+            draining = self._drain.is_set()
+            try:
+                pending.append(self._ingest.get(timeout=0.02))
+            except queue.Empty:
+                if draining and not pending:
+                    self._put(self._waves, _EOS)
+                    return
+                if not pending:
+                    continue
+
+            # Fill the head-of-line wave: linger briefly for same-bucket
+            # requests, then dispatch padded rather than stall.
+            key = self._cache.bucket_shape(pending[0].h, pending[0].w)
+            deadline = time.monotonic() + self.wave_linger
+            while (not draining
+                   and sum(self._cache.bucket_shape(r.h, r.w) == key
+                           for r in pending) < self.batch):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    pending.append(self._ingest.get(timeout=remaining))
+                except queue.Empty:
+                    break
+
+            wave_reqs, rest = [], collections.deque()
+            for r in pending:
+                if (len(wave_reqs) < self.batch
+                        and self._cache.bucket_shape(r.h, r.w) == key):
+                    wave_reqs.append(r)
+                else:
+                    rest.append(r)
+            pending = rest
+            if not self._put(self._waves, self._build_wave(key, wave_reqs)):
+                return
+
+    def _build_wave(self, key: tuple, reqs: list) -> _Wave:
+        bh, bw = key
+        pad = self.batch - len(reqs)
+
+        def fit(img: np.ndarray) -> np.ndarray:
+            h, w = img.shape
+            if (h, w) == (bh, bw):
+                return img
+            return np.pad(img, ((0, bh - h), (0, bw - w)), mode="edge")
+
+        lefts = [fit(r.left) for r in reqs]
+        rights = [fit(r.right) for r in reqs]
+        if pad:                     # replicate a real frame into padded slots
+            lefts += [lefts[0]] * pad
+            rights += [rights[0]] * pad
+        for r in reqs:              # emit only needs ids/shape/timing: release
+            r.left = r.right = None     # the host frames while waves are queued
+        with self._slock:
+            self._waves_built += 1
+            self._padded_slots += pad
+        return _Wave(
+            key=key, requests=reqs,
+            left=jnp.asarray(np.stack(lefts)),
+            right=jnp.asarray(np.stack(rights)),
+        )
+
+    # ---------------------------------------------------- stage 1: support
+    def _support_loop(self) -> None:
+        while True:
+            wave = self._get(self._waves)
+            if wave is None:
+                return
+            if wave is _EOS:
+                self._put(self._mid, _EOS)
+                return
+            wave.programs = self._cache.get(*wave.key)
+            wave.mid = wave.programs.support(wave.left, wave.right)
+            wave.left = wave.right = None
+            if not self._put(self._mid, wave):
+                return
+
+    # ------------------------------------------------------ stage 2: dense
+    def _dense_loop(self) -> None:
+        while True:
+            wave = self._get(self._mid)
+            if wave is None:
+                return
+            if wave is _EOS:
+                self._put(self._ready, _EOS)
+                return
+            wave.disp = wave.programs.dense(*wave.mid)
+            wave.mid = None
+            if not self._put(self._ready, wave):
+                return
+
+    # ------------------------------------------------------- stage 3: emit
+    def _emit_loop(self) -> None:
+        while True:
+            wave = self._get(self._ready)
+            if wave is None:
+                return
+            if wave is _EOS:
+                self._done.set()
+                return
+            disp = np.asarray(wave.disp)       # device -> host sync point
+            now = time.monotonic()
+            for slot, req in enumerate(wave.requests):
+                out = np.ascontiguousarray(disp[slot, : req.h, : req.w])
+                lat = now - req.t_submit
+                with self._slock:
+                    self._completed += 1
+                    self._latencies.append(lat)
+                    self._lat_sum += lat
+                    self._lat_max = max(self._lat_max, lat)
+                    self._t_last_emit = now
+                self._out.put(CompletedFrame(
+                    request_id=req.request_id, stream_id=req.stream_id,
+                    frame_id=req.frame_id, disparity=out, latency_s=lat,
+                ))
+            wave.disp = None

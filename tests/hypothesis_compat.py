@@ -1,0 +1,56 @@
+"""Optional-dependency shim for the hypothesis property tests.
+
+Several test modules mix plain unit tests with hypothesis property tests.
+``pytest.importorskip`` at module scope would skip the unit tests too, so
+instead the modules import ``given``/``settings``/``st``/``hnp`` from here:
+
+* with hypothesis installed (``pip install -r requirements-dev.txt``) these
+  are the real objects and the property tests run in full;
+* without it, strategy expressions evaluate to inert placeholders and every
+  ``@given`` test is collected as an explicit skip — the surrounding unit
+  tests still run.
+
+``require_hypothesis()`` wraps ``pytest.importorskip("hypothesis")`` for
+code that needs a hard skip (e.g. fixtures drawing examples directly).
+"""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategy:
+        """Absorbs any strategy-building expression without evaluating it."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __iter__(self):
+            return iter(())
+
+    hypothesis = st = hnp = _InertStrategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r requirements-dev.txt)"
+        )
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+
+def require_hypothesis():
+    """Hard skip for call sites that cannot run on the inert placeholders."""
+    return pytest.importorskip("hypothesis")

@@ -57,7 +57,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.distributed.sharding import logical_to_spec, use_rules
 from repro.launch.mesh import make_rules
-from repro.launch.dryrun import _shardings_for, collective_bytes
+from repro.launch.dryrun import _shardings_for, collective_bytes, peak_memory_bytes
 from repro.models.model import LMModel, cache_specs
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -84,7 +84,7 @@ with mesh, use_rules(rules):
     coll = collective_bytes(compiled.as_text())
     print(json.dumps({
         "ok": True,
-        "peak": mem.peak_memory_in_bytes,
+        "peak": peak_memory_bytes(mem),
         "collective_count": coll["count"],
     }))
 """

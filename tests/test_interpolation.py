@@ -1,11 +1,9 @@
 """Unit + property tests for the paper's support-point interpolation."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+
+from hypothesis_compat import given, hnp, settings, st
 
 from repro.core.interpolation import interpolate_support
 from repro.core.params import ElasParams, FIG2_PARAMS

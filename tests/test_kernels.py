@@ -1,12 +1,11 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes and input regimes, plus hypothesis property checks."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+
+from hypothesis_compat import given, hnp, settings, st
 
 from repro.core import descriptor as desc_mod
 from repro.core.params import ElasParams

@@ -3,12 +3,12 @@ naive step-by-step recurrences, and full-sequence must match incremental
 decode -- the invariants that make 500k-context serving trustworthy."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from hypothesis_compat import given, settings, st
 
 from repro.models import mamba as mamba_mod
 from repro.models import xlstm as xlstm_mod

@@ -1,0 +1,232 @@
+"""Continuous-batching stereo serving engine tests.
+
+Pins the four properties the engine is built around: per-stream order
+preservation under multi-stream load, partial-wave padding/masking that is
+bitwise-invisible in the output, program-cache hit/miss accounting across
+repeated and bucketed resolutions, and clean shutdown with work still
+queued.  Also covers the kernel backend registry the engine dispatches
+through.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.elas_stereo import SYNTH
+from repro.core.pipeline import ielas_disparity
+from repro.data.stereo import synthetic_stereo_pair
+from repro.kernels.registry import (
+    KernelBackend, available_backends, get_backend, register_backend,
+)
+from repro.serving.stereo_service import FrameProgramCache, StereoService
+
+P = SYNTH.params
+
+
+def _frames(n, h=60, w=80, seed0=0):
+    return [
+        synthetic_stereo_pair(height=h, width=w, d_max=24, seed=seed0 + s)[:2]
+        for s in range(n)
+    ]
+
+
+def _direct(left, right):
+    return np.asarray(
+        ielas_disparity(jnp.asarray(left, jnp.float32),
+                        jnp.asarray(right, jnp.float32), P)
+    )
+
+
+class TestWaveBatching:
+    def test_partial_wave_masking_matches_single_frame(self):
+        """3 requests into a batch-4 wave: the padded slot must be invisible
+        -- every real output bitwise-equals the fused single-frame program."""
+        frames = _frames(3)
+        svc = StereoService(P, batch=4, depth=2, wave_linger=0.05).start()
+        try:
+            svc.warmup([(60, 80)])
+            for i, (l, r) in enumerate(frames):
+                svc.submit(i, l, r)
+            done = svc.collect(3, timeout=300)
+        finally:
+            svc.stop()
+        assert len(done) == 3
+        st = svc.stats()
+        assert st.waves == 1 and st.padded_slots == 1
+        for c in done:
+            np.testing.assert_array_equal(
+                c.disparity, _direct(*frames[c.frame_id])
+            )
+
+    def test_multi_stream_order_preserved(self):
+        """Interleaved submissions from 3 streams come back, per stream, in
+        submission order."""
+        per_stream = 3
+        streams = 3
+        frames = _frames(per_stream)        # shared frames, distinct ids
+        svc = StereoService(P, batch=streams, depth=2, wave_linger=0.05).start()
+        try:
+            svc.warmup([(60, 80)])
+            for fid in range(per_stream):
+                for sid in range(streams):
+                    svc.submit(fid, *frames[fid], stream_id=sid)
+            done = svc.collect(per_stream * streams, timeout=300)
+        finally:
+            svc.stop()
+        assert len(done) == per_stream * streams
+        for sid in range(streams):
+            got = [c.frame_id for c in done if c.stream_id == sid]
+            assert got == sorted(got) == list(range(per_stream))
+
+    def test_stats_accounting(self):
+        frames = _frames(5, h=40, w=64)
+        svc = StereoService(P, batch=2, depth=2, wave_linger=0.05).start()
+        try:
+            svc.warmup([(40, 64)])
+            for i, (l, r) in enumerate(frames):
+                svc.submit(i, l, r)
+            done = svc.collect(5, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 5
+        assert st.submitted == st.completed == 5
+        assert st.dropped == 0 and st.pending == 0
+        assert st.waves * 2 == st.completed + st.padded_slots
+        assert st.latency_p50_ms > 0 and st.latency_max_ms >= st.latency_p50_ms
+        assert st.throughput_fps > 0
+        assert all(c.latency_s > 0 for c in done)
+
+
+class TestProgramCache:
+    def test_warmup_then_zero_recompiles(self):
+        """Repeated resolutions after warm-up: every wave is a cache hit."""
+        svc = StereoService(P, batch=2, depth=2, wave_linger=0.05).start()
+        try:
+            svc.warmup([(40, 64)])
+            assert svc.stats().cache_misses == 0
+            for i, (l, r) in enumerate(_frames(6, h=40, w=64)):
+                svc.submit(i, l, r)
+            done = svc.collect(6, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 6
+        assert st.cache_misses == 0, "recompile on the hot path after warm-up"
+        assert st.cache_hits == st.waves > 0
+        assert st.programs_cached == 1
+
+    def test_mixed_resolutions_miss_then_hit(self):
+        svc = StereoService(P, batch=1, depth=2).start()
+        try:
+            a = _frames(2, h=40, w=64)
+            b = _frames(2, h=45, w=70, seed0=7)
+            for i, (l, r) in enumerate(a + b):
+                svc.submit(i, l, r)
+            done = svc.collect(4, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 4
+        assert st.programs_cached == 2
+        assert st.cache_misses == 2          # one compile per resolution
+        assert st.cache_hits == 2            # second frame of each reuses it
+
+    def test_resolution_bucketing_shares_programs(self):
+        """bucket=16: (40,64) and (45,60) collapse onto one (48,64) program;
+        outputs keep their native shapes."""
+        svc = StereoService(P, batch=2, depth=2, bucket=16,
+                            wave_linger=0.05).start()
+        try:
+            a = _frames(1, h=40, w=64)[0]
+            b = _frames(1, h=45, w=60, seed0=7)[0]
+            svc.submit(0, *a)
+            svc.submit(1, *b)
+            done = svc.collect(2, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 2
+        assert st.programs_cached == 1, "bucketing should share one program"
+        shapes = {c.frame_id: c.disparity.shape for c in done}
+        assert shapes == {0: (40, 64), 1: (45, 60)}
+
+    def test_cache_key_includes_bucketing(self):
+        cache = FrameProgramCache(P, batch=2, backend="ref", bucket=32)
+        assert cache.bucket_shape(40, 64) == (64, 64)
+        assert cache.bucket_shape(64, 64) == (64, 64)
+        assert cache.bucket_shape(65, 64) == (96, 64)
+        exact = FrameProgramCache(P, batch=2, backend="ref")
+        assert exact.bucket_shape(41, 63) == (41, 63)
+
+
+class TestLifecycle:
+    def test_clean_shutdown_with_nonempty_queue(self):
+        """stop(drain=False) with queued work discards it, accounts for it,
+        and returns promptly."""
+        svc = StereoService(P, batch=1, depth=2, max_pending=64).start()
+        svc.warmup([(40, 64)])
+        frames = _frames(12, h=40, w=64)
+        for i, (l, r) in enumerate(frames):
+            svc.submit(i, l, r)
+        t0 = time.monotonic()
+        svc.stop(drain=False)
+        assert time.monotonic() - t0 < 30.0
+        st = svc.stats()
+        assert st.submitted == 12
+        assert st.completed + st.dropped == 12
+        # the service must be fully stopped: no threads still running
+        assert not svc._threads
+
+    def test_drain_completes_all_queued_work(self):
+        svc = StereoService(P, batch=2, depth=2, wave_linger=0.05).start()
+        svc.warmup([(40, 64)])
+        frames = _frames(5, h=40, w=64)
+        for i, (l, r) in enumerate(frames):
+            svc.submit(i, l, r)
+        svc.stop(drain=True)                 # no collect() before stop
+        st = svc.stats()
+        assert st.completed == 5 and st.dropped == 0
+        got = {c.frame_id for c in svc.collect(5, timeout=5)}
+        assert got == set(range(5))
+
+    def test_context_manager(self):
+        frames = _frames(2, h=40, w=64)
+        with StereoService(P, batch=2, wave_linger=0.05) as svc:
+            for i, (l, r) in enumerate(frames):
+                svc.submit(i, l, r)
+            done = svc.collect(2, timeout=300)
+        assert {c.frame_id for c in done} == {0, 1}
+
+    def test_submit_rejects_mismatched_shapes(self):
+        svc = StereoService(P)
+        with pytest.raises(ValueError):
+            svc.submit(0, np.zeros((4, 8), np.float32),
+                       np.zeros((4, 9), np.float32))
+
+
+class TestBackendRegistry:
+    def test_builtin_backends_registered(self):
+        assert {"ref", "pallas", "pallas_tpu"} <= set(available_backends())
+        be = get_backend("ref")
+        assert be.name == "ref"
+        for op in (be.sobel, be.support_match, be.dense_match, be.median3x3):
+            assert callable(op)
+
+    def test_unknown_backend_lists_available(self):
+        with pytest.raises(KeyError, match="ref"):
+            get_backend("no-such-backend")
+
+    def test_register_and_overwrite_semantics(self):
+        ref = get_backend("ref")
+        probe = KernelBackend(
+            name="_test_probe", sobel=ref.sobel,
+            support_match=ref.support_match, dense_match=ref.dense_match,
+            median3x3=ref.median3x3, description="test-only alias",
+        )
+        register_backend(probe)
+        assert get_backend("_test_probe") is probe
+        with pytest.raises(ValueError):
+            register_backend(probe)
+        register_backend(probe, overwrite=True)   # allowed explicitly
