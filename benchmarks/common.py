@@ -1,7 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: timing, percentiles, CSV rows, JSON export,
+and the CI regression gate.
+
+Every table module prints ``name,us_per_call,derived`` CSV rows via
+:func:`row`; the timing and percentile helpers here are the single home
+for logic that used to be duplicated across ``table4_throughput`` and
+``table5_multistream``.  ``benchmarks.run`` collects the rows, optionally
+writes them as JSON (the CI artifact) and checks fps-bearing rows against
+a checked-in baseline (:func:`check_against_baseline`).
+"""
 from __future__ import annotations
 
+import json
+import re
 import time
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 
@@ -21,7 +33,96 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def wall_seconds(fn: Callable[[], object], reps: int = 3,
+                 reduce: str = "median", warmup: int = 0) -> float:
+    """Wall time of ``fn()`` in seconds over ``reps`` runs.
+
+    ``reduce`` is ``"median"`` (noise-robust default) or ``"min"`` (best
+    case, for comparing alternatives on noisy CI machines).  ``fn`` must
+    block on its own work (e.g. end with ``block_until_ready`` or a host
+    sync).
+    """
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[0] if reduce == "min" else times[len(times) // 2]
+
+
+def percentile(values: Iterable[float], q: float) -> float:
+    """The ``q``-quantile (0..1) of ``values`` by nearest-rank; 0.0 if empty."""
+    xs = sorted(values)
+    if not xs:
+        return 0.0
+    idx = min(len(xs) - 1, int(q * len(xs)))
+    return xs[idx]
+
+
 def row(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+# ---------------------------------------------------------------------------
+# JSON export + CI regression gate
+# ---------------------------------------------------------------------------
+_FPS_RE = re.compile(r"(?:^|\s)fps=([0-9.]+)")
+
+
+def parse_fps(derived: str) -> Optional[float]:
+    """The ``fps=...`` figure embedded in a derived string, if any."""
+    m = _FPS_RE.search(derived)
+    return float(m.group(1)) if m else None
+
+
+def rows_to_records(lines: Sequence[str]) -> dict:
+    """``name,us,derived`` CSV lines -> {name: {us_per_call, derived, fps}}."""
+    records = {}
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        rec = {"us_per_call": float(us), "derived": derived}
+        fps = parse_fps(derived)
+        if fps is not None:
+            rec["fps"] = fps
+        records[name] = rec
+    return records
+
+
+def write_json(path: str, records: dict, meta: Optional[dict] = None) -> None:
+    with open(path, "w") as f:
+        json.dump({"meta": meta or {}, "rows": records}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def load_baseline(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_against_baseline(records: dict, baseline: dict,
+                           tolerance: float = 0.30) -> list[str]:
+    """Regression check: every fps-bearing baseline row must be present and
+    within ``tolerance`` fractional slowdown.  Returns failure messages
+    (empty == pass)."""
+    failures = []
+    for name, base in sorted(baseline.get("rows", {}).items()):
+        base_fps = base.get("fps")
+        if base_fps is None:
+            continue
+        rec = records.get(name)
+        if rec is None or rec.get("fps") is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        floor = base_fps * (1.0 - tolerance)
+        if rec["fps"] < floor:
+            failures.append(
+                f"{name}: fps {rec['fps']:.2f} < {floor:.2f} "
+                f"(baseline {base_fps:.2f}, tolerance {tolerance:.0%})"
+            )
+    return failures

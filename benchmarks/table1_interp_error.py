@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row
 from repro.configs.elas_stereo import SYNTH
 from repro.core import pipeline
 from repro.data.stereo import LIGHTING_CONDITIONS, synthetic_stereo_pair

@@ -15,7 +15,6 @@ from repro.configs.elas_stereo import KITTI, TSUKUBA
 
 def _stage_bytes(height: int, width: int, p) -> dict:
     gh, gw = p.grid_shape(height, width)
-    d = p.num_disp
     return {
         "sobel_maps_int8": 2 * height * width,               # the 8-bit trait
         "descriptors_if_materialised": height * width * 16,  # what we avoid
@@ -28,7 +27,7 @@ def _stage_bytes(height: int, width: int, p) -> dict:
     }
 
 
-def _kernel_vmem(width: int, num_disp: int) -> dict:
+def _kernel_vmem(width: int, num_disp: int, num_cand: int = 25) -> dict:
     """VMEM working set per kernel program instance (from BlockSpecs)."""
     bh_sobel, bh_support, bh_dense = 8, 4, 4
     return {
@@ -37,11 +36,14 @@ def _kernel_vmem(width: int, num_disp: int) -> dict:
             2 * bh_support * width * 16                       # descriptors
             + 2 * bh_support * num_disp * width * 4           # CV + diagonal
         ),
+        # Candidate-window dense matching: the working set scales with the
+        # candidate count (20 + 5), NOT num_disp -- the (bh, D, W) volume
+        # of the pre-tiling kernel never exists.
         "dense_match": (
-            2 * bh_dense * width * 16
-            + 2 * bh_dense * num_disp * width * 4
-            + 2 * bh_dense * num_disp * width * 4             # energies
-            + 2 * bh_dense * width * 25 * 4                   # candidates
+            2 * bh_dense * width * 16                         # descriptors
+            + 2 * bh_dense * width * num_cand * 16            # gathered desc
+            + 2 * 2 * bh_dense * width * num_cand * 4         # SAD + energy
+            + 2 * bh_dense * width * num_cand * 4             # candidates
         ),
         "median": 3 * 16 * (width + 2) * 4,
     }

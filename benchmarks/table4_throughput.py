@@ -4,23 +4,23 @@ Paper: 57.6 fps (iELAS) vs 17.6 fps (FPGA+ARM) vs 1.5-3 fps (i7) -- the
 speedup comes from eliminating the host round-trip for triangulation.
 
 Here (CPU backend; relative numbers are the claim):
-  * ielas      -- single jitted program per frame,
-  * hybrid     -- device front half -> host scipy Delaunay -> device back
-                  half (the [6] structure),
-  * service    -- the ping-pong StereoService (overlap of ingest/compute),
+  * ielas       -- single jitted program per frame,
+  * dense_stage -- the row-tiled dense stage alone (the CI smoke gate's
+                   metric: benchmarks/baseline_ci.json pins its fps),
+  * hybrid      -- device front half -> host scipy Delaunay -> device back
+                   half (the [6] structure),
+  * service     -- the ping-pong StereoService (overlap of ingest/compute),
 plus the analytic TPU-v5e projection: bytes-bound fps from the pipeline's
 HBM traffic (the stereo pipeline is strongly memory-bound on TPU).
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row, time_call, wall_seconds
 from repro.configs.elas_stereo import SYNTH
 from repro.core import pipeline
+from repro.core.tiling import TileSpec
 from repro.data.stereo import synthetic_stereo_pair
 from repro.serving.stereo_service import StereoService
 
@@ -45,8 +45,10 @@ def _tpu_projection(h: int, w: int, p) -> float:
     return 1.0 / max(t_mem, t_cmp)
 
 
-def run(height: int = 120, width: int = 160, frames: int = 6) -> list[str]:
+def run(height: int = 120, width: int = 160, frames: int = 6,
+        tile_rows: int = 32) -> list[str]:
     p = SYNTH.params
+    tile = TileSpec(rows=tile_rows)
     rows = []
     il, ir, gt = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=3)
     il_j = jnp.asarray(il, jnp.float32)
@@ -57,17 +59,24 @@ def run(height: int = 120, width: int = 160, frames: int = 6) -> list[str]:
     )
     rows.append(row("table4/ielas", us_ielas, f"fps={1e6/us_ielas:.1f}"))
 
-    pipeline.elas_baseline_disparity(il_j, ir_j, p)   # warm the jitted halves
-    times = []
-    for _ in range(3):
-        t0 = time.perf_counter()
-        pipeline.elas_baseline_disparity(il_j, ir_j, p)
-        times.append(time.perf_counter() - t0)
-    t_hybrid = sorted(times)[1]
+    # -- the row-tiled dense stage alone (the CI smoke gate's metric) --------
+    dl, dr, sup = pipeline.ielas_support_stage(il_j, ir_j, p)
+    sup = pipeline.ielas_interpolate_stage(sup, p)
+    us_dense = time_call(
+        lambda a, b, s: pipeline.ielas_dense_stage(a, b, s, p, tile=tile),
+        dl, dr, sup,
+    )
+    rows.append(row("table4/dense_stage", us_dense,
+                    f"fps={1e6/us_dense:.1f} tile_rows={tile.rows}"))
+
+    t_hybrid = wall_seconds(
+        lambda: pipeline.elas_baseline_disparity(il_j, ir_j, p),
+        reps=3, reduce="median", warmup=1,   # warm the jitted halves
+    )
     rows.append(row("table4/hybrid", t_hybrid * 1e6,
                     f"fps={1.0/t_hybrid:.2f}"))
 
-    svc = StereoService(p, depth=2).start()
+    svc = StereoService(p, depth=2, tile=tile).start()
     # warm the service program before timing the stream
     warm = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=99)[:2]
     svc.submit(-1, *warm)

@@ -5,11 +5,15 @@ benchmark drives the continuous-batching :class:`StereoService` with several
 concurrent producer streams and compares sustained fps against the fused
 single-frame program run back-to-back — the paper's 57.6 fps mechanism,
 scaled to multi-user traffic by wave batching + the staged ping-pong
-pipeline instead of raw kernel speed.
+pipeline instead of raw kernel speed.  The service's dense stage runs
+row-tiled (see repro.core.tiling), which is what keeps wave batching ahead
+of single-frame programs at VGA and above on CPU.
 
 Reported rows:
   * single_frame       -- fused ielas_disparity, sequential, frames/s
   * service_b{batch}   -- continuous batching, N streams, frames/s
+  * service_autobatch  -- same traffic with the calibrated per-bucket wave
+                          width (the warmup()-time auto-batch pass)
   * service_cache      -- program-cache hits/misses after warm-up (misses
                           must be 0: no recompiles on the hot path)
   * service_latency    -- p50/p95 request latency under that load
@@ -17,25 +21,27 @@ Reported rows:
 from __future__ import annotations
 
 import threading
-import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import row
+from benchmarks.common import percentile, row, wall_seconds
 from repro.configs.elas_stereo import SYNTH
 from repro.core import pipeline
+from repro.core.tiling import TileSpec
 from repro.data.stereo import synthetic_stereo_pair
 from repro.serving.stereo_service import StereoService
 
 
 def run(height: int = 60, width: int = 80, streams: int = 4,
-        frames_per_stream: int = 6, batch: int = 4, reps: int = 2) -> list[str]:
-    # Default resolution sits where wave batching pays off on XLA:CPU: the
-    # b=4 vmapped program beats 4 sequential frames below roughly QVGA
-    # (larger frames blow per-core cache and favor single-frame programs --
-    # on TPU the crossover moves far right).  Both paths run ``reps`` times
-    # interleaved and keep their best, since CI machines are noisy.
+        frames_per_stream: int = 6, batch: int = 4, reps: int = 2,
+        tile_rows: int = 32, autobatch: bool = True) -> list[str]:
+    # The tiled dense stage keeps wave intermediates one row-tile at a time,
+    # so the b=4 vmapped program no longer blows per-core cache above QVGA;
+    # run with e.g. height=480 width=640 for the VGA crossover check.  Both
+    # paths run ``reps`` times interleaved and keep their best, since CI
+    # machines are noisy.
     p = SYNTH.params
+    tile = TileSpec(rows=tile_rows)
     rows = []
     n_total = streams * frames_per_stream
     stream_frames = [
@@ -50,40 +56,42 @@ def run(height: int = 60, width: int = 80, streams: int = 4,
     ir = jnp.asarray(stream_frames[0][0][1], jnp.float32)
     pipeline.ielas_disparity(il, ir, p).block_until_ready()      # compile
 
-    def run_single() -> float:
-        t0 = time.perf_counter()
+    def run_single() -> None:
         for sid in range(streams):
             for l, r in stream_frames[sid]:
                 pipeline.ielas_disparity(
                     jnp.asarray(l, jnp.float32), jnp.asarray(r, jnp.float32), p
                 ).block_until_ready()
-        return time.perf_counter() - t0
+
+    def drive_service(svc: StereoService):
+        done: list = []
+
+        def go() -> None:
+            def producer(sid: int):
+                for fid, (l, r) in enumerate(stream_frames[sid]):
+                    svc.submit(fid, l, r, stream_id=sid)
+
+            threads = [threading.Thread(target=producer, args=(sid,))
+                       for sid in range(streams)]
+            for t in threads:
+                t.start()
+            done[:] = svc.collect(n_total, timeout=600)
+            for t in threads:
+                t.join()
+            assert len(done) == n_total, f"lost frames: {len(done)}/{n_total}"
+
+        return go, done
 
     # ---- continuous batching under concurrent streams ----------------------
-    svc = StereoService(p, batch=batch, depth=2, wave_linger=0.02).start()
+    svc = StereoService(p, batch=batch, depth=2, wave_linger=0.02,
+                        tile=tile).start()
     svc.warmup([(height, width)])
-
-    def run_service() -> float:
-        def producer(sid: int):
-            for fid, (l, r) in enumerate(stream_frames[sid]):
-                svc.submit(fid, l, r, stream_id=sid)
-
-        threads = [threading.Thread(target=producer, args=(sid,))
-                   for sid in range(streams)]
-        t0 = time.perf_counter()
-        for t in threads:
-            t.start()
-        done = svc.collect(n_total, timeout=600)
-        wall = time.perf_counter() - t0
-        for t in threads:
-            t.join()
-        assert len(done) == n_total, f"lost frames: {len(done)}/{n_total}"
-        return wall
+    go_service, done = drive_service(svc)
 
     t_single, wall = float("inf"), float("inf")
     for _ in range(reps):            # interleave to decorrelate machine noise
-        t_single = min(t_single, run_single())
-        wall = min(wall, run_service())
+        t_single = min(t_single, wall_seconds(run_single, reps=1))
+        wall = min(wall, wall_seconds(go_service, reps=1))
     svc.stop()
 
     st = svc.stats()
@@ -94,14 +102,32 @@ def run(height: int = 60, width: int = 80, streams: int = 4,
     rows.append(row(f"table5/service_b{batch}", wall / n_total * 1e6,
                     f"fps={fps_service:.1f} streams={streams} "
                     f"occupancy={st.wave_occupancy:.2f} "
+                    f"tile_rows={tile.rows} "
                     f"speedup_vs_single={fps_service / fps_single:.2f}x"))
     rows.append(row("table5/service_cache", 0.0,
                     f"hits={st.cache_hits} misses={st.cache_misses} "
                     f"programs={st.programs_cached}"))
+    lats = sorted(c.latency_s for c in done)
     rows.append(row("table5/service_latency", st.latency_p50_ms * 1e3,
-                    f"p50_ms={st.latency_p50_ms:.0f} "
-                    f"p95_ms={st.latency_p95_ms:.0f} "
+                    f"p50_ms={percentile(lats, 0.5) * 1e3:.0f} "
+                    f"p95_ms={percentile(lats, 0.95) * 1e3:.0f} "
                     f"backpressure_s={st.backpressure_seconds:.3f}"))
+
+    # ---- calibrated wave width (warmup()-time auto-batching) ---------------
+    if autobatch:
+        svc2 = StereoService(p, batch=batch, depth=2, wave_linger=0.02,
+                             tile=tile, autobatch=True).start()
+        svc2.warmup([(height, width)])
+        go2, _done2 = drive_service(svc2)
+        wall2 = float("inf")
+        for _ in range(reps):
+            wall2 = min(wall2, wall_seconds(go2, reps=1))
+        svc2.stop()
+        st2 = svc2.stats()
+        rows.append(row("table5/service_autobatch", wall2 / n_total * 1e6,
+                        f"fps={n_total / wall2:.1f} "
+                        f"batch_by_bucket={dict(st2.batch_by_bucket)} "
+                        f"calibrations={st2.calibrations}"))
     return rows
 
 

@@ -11,7 +11,7 @@ demonstrates the identical code path in under two minutes.)
 import argparse
 
 from repro.data.tokens import pipeline_for
-from repro.models.config import LayerKind, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.model import LMModel, count_params
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedule import ScheduleConfig

@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Optional
 
 from repro.configs.shapes import SHAPES
 from repro.models.config import LayerKind, ModelConfig

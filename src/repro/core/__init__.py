@@ -5,9 +5,11 @@ from repro.core.pipeline import (  # noqa: F401
     disparity_error,
     elas_baseline_disparity,
     ielas_dense_stage,
+    ielas_dense_stage_batched,
     ielas_disparity,
     ielas_interpolate_stage,
     ielas_support_stage,
 )
+from repro.core.tiling import TileCapability, TileSpec  # noqa: F401
 from repro.core.interpolation import interpolate_support  # noqa: F401
 from repro.core.support import INVALID, support_from_images  # noqa: F401

@@ -10,17 +10,31 @@ candidate count is static (paper: 20 + 5).
 
 The math (cost volume from shifted slices, candidate restriction as a mask
 over the disparity axis, both views from one volume) lives in
-:mod:`repro.kernels.ref`; this module builds the candidate tensors.
+:mod:`repro.kernels.ref`; this module builds the candidate tensors and owns
+the *tiled* execution strategies:
+
+* :func:`dense_match_tiled_xla` -- the XLA fallback: walk the flat
+  batch x row-tile grid with ``lax.map``, evaluating each tile over its
+  candidate window (:func:`repro.kernels.ref.dense_match_rows_windowed_ref`)
+  so the full ``(B, H, W, D)`` cost volume is never materialised.  Dense
+  matching has no cross-row dependency, so the result is bitwise identical
+  to the untiled path for any tile height.
+* :func:`dense_both_views` / :func:`dense_both_views_batched` -- the
+  public entry points; a :class:`~repro.core.tiling.TileSpec` selects
+  between the untiled volume path and a backend's tiled path (declared in
+  the kernel registry).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.grid_vector import cell_index
 from repro.core.params import ElasParams
+from repro.core.tiling import TileSpec
 
 
 def candidate_set(
@@ -43,7 +57,75 @@ def candidate_set(
     return jnp.clip(cands, p.disp_min, p.disp_max).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_disp", "beta", "gamma", "sigma", "match_texture", "tile_rows",
+    ),
+)
+def dense_match_tiled_xla(
+    desc_l: jax.Array,          # (H, W, 16) or (B, H, W, 16) int8
+    desc_r: jax.Array,
+    mu_l: jax.Array,            # (H, W) or (B, H, W) float32
+    mu_r: jax.Array,
+    cand_l: jax.Array,          # (H, W, C) or (B, H, W, C) int32
+    cand_r: jax.Array,
+    *,
+    num_disp: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+    tile_rows: int = 16,
+) -> tuple[jax.Array, jax.Array]:
+    """Tiled XLA dense matching over the flat batch x row-tile grid.
+
+    ``lax.map`` runs one tile at a time, so the live working set is one
+    tile's candidate energies -- ``tile_rows * W * C`` floats -- instead
+    of a ``(B, H, W, D)`` volume; this is what keeps >= VGA wave batching
+    inside per-core cache on CPU.  Accepts single frames or a leading
+    batch axis (the batch and tile axes are flattened together, so tile
+    j of frame i never waits for the whole of frame i-1).
+    """
+    from repro.kernels import ref as _ref   # late import: kernels build on core
+
+    batched = desc_l.ndim == 4
+    if not batched:
+        desc_l, desc_r = desc_l[None], desc_r[None]
+        mu_l, mu_r = mu_l[None], mu_r[None]
+        cand_l, cand_r = cand_l[None], cand_r[None]
+    b, h, w, _ = desc_l.shape
+    bh = min(tile_rows, h)
+    t = -(-h // bh)
+    pad = t * bh - h
+
+    def split(x: jax.Array) -> jax.Array:
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        return x.reshape(b * t, bh, *x.shape[2:])
+
+    def one_tile(tile):
+        tdl, tdr, tml, tmr, tcl, tcr = tile
+        return _ref.dense_match_rows_windowed_ref(
+            tdl, tdr, tml, tmr, tcl, tcr,
+            num_disp=num_disp, beta=beta, gamma=gamma, sigma=sigma,
+            match_texture=match_texture,
+        )
+
+    disp_l, disp_r = jax.lax.map(
+        one_tile,
+        (split(desc_l), split(desc_r), split(mu_l), split(mu_r),
+         split(cand_l), split(cand_r)),
+    )
+
+    def join(d: jax.Array) -> jax.Array:
+        d = d.reshape(b, t * bh, w)[:, :h]
+        return d if batched else d[0]
+
+    return join(disp_l), join(disp_r)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def dense_both_views(
     desc_l: jax.Array,         # (H, W, 16) int8
     desc_r: jax.Array,         # (H, W, 16) int8
@@ -53,22 +135,66 @@ def dense_both_views(
     grid_vec_r: jax.Array,     # (CH, CW, K)
     p: ElasParams,
     backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(disp_l, disp_r), each (H, W) float32 with INVALID sentinels.
 
-    Both views come from ONE cost volume (the right view is its diagonal) --
-    half the SAD compute of two independent passes.
+    Both views come from ONE pass over the descriptors -- half the SAD
+    compute of two independent passes.  ``tile`` selects the backend's
+    row-tiled dense path (bitwise identical to untiled; a backend that
+    does not declare tiling support falls back to its untiled entry).
     """
     from repro.kernels import ops
 
     cand_l = candidate_set(mu_l, grid_vec_l, p)
     cand_r = candidate_set(mu_r, grid_vec_r, p)
     return ops.dense_match(
-        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, p, backend=backend
+        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, p,
+        backend=backend, tile=tile,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("p", "direction", "backend"))
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def dense_both_views_batched(
+    desc_l: jax.Array,         # (B, H, W, 16) int8
+    desc_r: jax.Array,         # (B, H, W, 16) int8
+    mu_l: jax.Array,           # (B, H, W) float32
+    mu_r: jax.Array,           # (B, H, W) float32
+    grid_vec_l: jax.Array,     # (B, CH, CW, K)
+    grid_vec_r: jax.Array,     # (B, CH, CW, K)
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Wave-shaped dense matching: (disp_l, disp_r), each (B, H, W).
+
+    With a ``tile`` and a backend whose declared capability includes
+    ``batched_map``, the whole wave runs through the flat batch x tile
+    ``lax.map`` grid (one tile live at a time); otherwise the per-frame
+    path is vmapped, which preserves semantics but materialises per-frame
+    intermediates batch-wide.
+    """
+    from repro.kernels import ops
+    from repro.kernels.registry import get_backend
+
+    cands_l = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_l, grid_vec_l)
+    cands_r = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_r, grid_vec_r)
+
+    be = get_backend(backend)
+    eff = be.tiling.clamp(tile)
+    if eff is not None and be.tiling.batched_map:
+        return be.dense_match_tiled(
+            desc_l, desc_r, mu_l, mu_r, cands_l, cands_r,
+            num_disp=p.num_disp, beta=p.beta, gamma=p.gamma, sigma=p.sigma,
+            match_texture=p.match_texture, tile_rows=eff.rows,
+        )
+    per_frame = functools.partial(
+        ops.dense_match_candidates, p=p, backend=backend, tile=tile
+    )
+    return jax.vmap(per_frame)(desc_l, desc_r, mu_l, mu_r, cands_l, cands_r)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "direction", "backend", "tile"))
 def dense_disparity(
     desc_src: jax.Array,
     desc_dst: jax.Array,
@@ -77,6 +203,7 @@ def dense_disparity(
     p: ElasParams,
     direction: int = -1,
     backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
     """Single-view compatibility wrapper.
 
@@ -85,10 +212,12 @@ def dense_disparity(
     """
     if direction == -1:
         disp_l, _ = dense_both_views(
-            desc_src, desc_dst, mu, mu, grid_vec, grid_vec, p, backend=backend
+            desc_src, desc_dst, mu, mu, grid_vec, grid_vec, p,
+            backend=backend, tile=tile,
         )
         return disp_l
     _, disp_r = dense_both_views(
-        desc_dst, desc_src, mu, mu, grid_vec, grid_vec, p, backend=backend
+        desc_dst, desc_src, mu, mu, grid_vec, grid_vec, p,
+        backend=backend, tile=tile,
     )
     return disp_r

@@ -24,6 +24,12 @@ The serving engine (:mod:`repro.serving.stereo_service`) compiles the
 support and dense halves as separate wave programs so consecutive waves
 overlap across stages — the service-level analogue of the paper's
 ping-pong BRAMs.
+
+The dense stage accepts a :class:`~repro.core.tiling.TileSpec`: with one,
+dense matching runs in row tiles over the per-pixel candidate window (the
+software analogue of the FPGA's line-buffered tiling), bitwise identical
+to the untiled path; :func:`ielas_dense_stage_batched` is the wave-shaped
+variant that walks the flat batch x tile grid one tile at a time.
 """
 from __future__ import annotations
 
@@ -36,7 +42,11 @@ import numpy as np
 
 from repro.core import descriptor as desc_mod
 from repro.core import triangulation
-from repro.core.dense import dense_both_views, dense_disparity
+from repro.core.dense import (
+    dense_both_views,
+    dense_both_views_batched,
+    dense_disparity,
+)
 from repro.core.filtering import filter_support
 from repro.core.grid_vector import build_grid_vector
 from repro.core.interpolation import interpolate_support
@@ -44,6 +54,21 @@ from repro.core.params import ElasParams
 from repro.core.postprocess import postprocess
 from repro.core.prior import plane_prior, right_view_support
 from repro.core.support import extract_support_grid
+from repro.core.tiling import TileSpec
+
+
+def _dense_priors(
+    support_left: jax.Array, h: int, w: int, p: ElasParams
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-frame dense-stage inputs: (mu_l, mu_r, gv_l, gv_r)."""
+    mu_l = plane_prior(support_left, h, w, p)
+    gv_l = build_grid_vector(support_left, p)
+
+    sup_r = right_view_support(support_left, p)
+    sup_r = interpolate_support(sup_r, p)
+    mu_r = plane_prior(sup_r, h, w, p)
+    gv_r = build_grid_vector(sup_r, p)
+    return mu_l, mu_r, gv_l, gv_r
 
 
 def ielas_dense_stage(
@@ -52,21 +77,43 @@ def ielas_dense_stage(
     support_left: jax.Array,   # complete (interpolated) left-view support grid
     p: ElasParams,
     backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
     """Dense disparity for both views + post-processing -> final left map."""
     h, w = dl.shape[:2]
-    mu_l = plane_prior(support_left, h, w, p)
-    gv_l = build_grid_vector(support_left, p)
-
-    sup_r = right_view_support(support_left, p)
-    sup_r = interpolate_support(sup_r, p)
-    mu_r = plane_prior(sup_r, h, w, p)
-    gv_r = build_grid_vector(sup_r, p)
-
+    mu_l, mu_r, gv_l, gv_r = _dense_priors(support_left, h, w, p)
     disp_l, disp_r = dense_both_views(
-        dl, dr, mu_l, mu_r, gv_l, gv_r, p, backend=backend
+        dl, dr, mu_l, mu_r, gv_l, gv_r, p, backend=backend, tile=tile
     )
     return postprocess(disp_l, disp_r, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def ielas_dense_stage_batched(
+    dl: jax.Array,             # (B, H, W, 16)
+    dr: jax.Array,
+    support_left: jax.Array,   # (B, GH, GW)
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
+) -> jax.Array:
+    """Wave-shaped dense stage: (B, H, W) final left maps.
+
+    The per-frame prep (priors, grid vectors) is vmapped -- it is small --
+    but the dense matching itself goes through
+    :func:`~repro.core.dense.dense_both_views_batched`, which with a
+    ``tile`` walks the flat batch x row-tile grid one tile at a time
+    instead of materialising batch-wide volumes.  Bitwise identical to
+    vmapping :func:`ielas_dense_stage` over the wave.
+    """
+    h, w = dl.shape[1:3]
+    mu_l, mu_r, gv_l, gv_r = jax.vmap(
+        lambda s: _dense_priors(s, h, w, p)
+    )(support_left)
+    disp_l, disp_r = dense_both_views_batched(
+        dl, dr, mu_l, mu_r, gv_l, gv_r, p, backend=backend, tile=tile
+    )
+    return jax.vmap(lambda a, b: postprocess(a, b, p))(disp_l, disp_r)
 
 
 def ielas_interpolate_stage(support: jax.Array, p: ElasParams) -> jax.Array:
@@ -74,14 +121,18 @@ def ielas_interpolate_stage(support: jax.Array, p: ElasParams) -> jax.Array:
     return interpolate_support(support, p)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def ielas_disparity(
-    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+    img_left: jax.Array,
+    img_right: jax.Array,
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
     """iELAS: fully on-device, single static XLA program. (H, W) float32."""
     dl, dr, support = ielas_support_stage(img_left, img_right, p, backend=backend)
     support = ielas_interpolate_stage(support, p)
-    return ielas_dense_stage(dl, dr, support, p, backend=backend)
+    return ielas_dense_stage(dl, dr, support, p, backend=backend, tile=tile)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend"))

@@ -66,7 +66,7 @@ def right_view_support(
     projected left node within one grid pitch; otherwise INVALID.  This is
     a regular (GW x GW per row) min-reduction -- no scatter.
     """
-    from repro.core.support import INVALID, candidate_coords
+    from repro.core.support import INVALID
 
     gh, gw = support_left.shape
     step = p.candidate_step

@@ -1,0 +1,100 @@
+"""Row-tile specifications for the dense-matching stage.
+
+The iELAS FPGA keeps the dense-matching working set on-chip with
+line-buffered tiling and ping-pong BRAMs; the software analogue is to
+process the image in fixed-height row tiles whose intermediates fit the
+per-core cache instead of materialising a full ``(B, H, W, D)`` cost
+volume.  Dense matching has no cross-row data dependencies (the cost
+volume is built row by row), so any row tiling is *bitwise* equivalent to
+the untiled computation -- tiling is purely a memory-locality decision.
+
+Two small types live here:
+
+* :class:`TileSpec` -- how a caller wants the dense stage tiled.  Frozen
+  and hashable so it can travel through ``jax.jit`` as a static argument
+  alongside ``ElasParams``.
+* :class:`TileCapability` -- what a kernel backend *declares* it can do
+  (see :mod:`repro.kernels.registry`).  Callers consult it to pick between
+  the backend's tiled entry point, a batched ``lax.map`` fallback, and the
+  plain untiled path.
+
+This module is dependency-free (stdlib only) so the kernel registry can
+import it without pulling in the rest of the core package.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """How to tile the dense stage: ``rows`` image rows per tile.
+
+    ``rows`` must be positive; the last tile of an image whose height is
+    not a multiple of ``rows`` is padded and cropped (a partial tile), so
+    odd image sizes need no special handling by callers.
+    """
+
+    rows: int = 16
+
+    def __post_init__(self):
+        if self.rows < 1:
+            raise ValueError(f"tile rows must be >= 1, got {self.rows}")
+
+    def num_tiles(self, height: int) -> int:
+        """Tiles covering ``height`` rows (the last one possibly partial)."""
+        return -(-height // self.rows)
+
+    def padded_height(self, height: int) -> int:
+        """``height`` rounded up to a whole number of tiles."""
+        return self.num_tiles(height) * self.rows
+
+    @classmethod
+    def for_cache(
+        cls,
+        width: int,
+        num_candidates: int,
+        budget_bytes: int = 1 << 21,
+        max_rows: int = 64,
+    ) -> "TileSpec":
+        """Pick a tile height whose candidate-energy working set
+        (``rows * width * num_candidates`` f32 + the int32 SAD of the same
+        shape) stays under ``budget_bytes`` (default 2 MiB, a typical
+        per-core L2)."""
+        per_row = max(1, width * num_candidates * 8)
+        rows = max(1, min(max_rows, budget_bytes // per_row))
+        return cls(rows=rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCapability:
+    """A kernel backend's declared dense-stage tiling support.
+
+    ``tiled_dense``
+        the backend has a row-tiled dense entry point (``dense_match_tiled``
+        in the registry) accepting ``tile_rows=``.
+    ``batched_map``
+        that entry point natively accepts a leading batch axis and walks
+        the flat batch x tile grid itself (the ``lax.map`` fallback); when
+        False, batched callers ``vmap`` the per-frame tiled call instead.
+    ``default_rows`` / ``max_rows``
+        the tile height the backend prefers, and an optional hard cap
+        (e.g. a VMEM bound for a compiled kernel).
+    """
+
+    tiled_dense: bool = False
+    batched_map: bool = False
+    default_rows: int = 16
+    max_rows: Optional[int] = None
+
+    def clamp(self, tile: Optional[TileSpec]) -> Optional[TileSpec]:
+        """Fit a requested spec to this capability (None if unsupported)."""
+        if tile is None or not self.tiled_dense:
+            return None
+        if self.max_rows is not None and tile.rows > self.max_rows:
+            return TileSpec(rows=self.max_rows)
+        return tile
+
+    def default_tile(self) -> Optional[TileSpec]:
+        return TileSpec(rows=self.default_rows) if self.tiled_dense else None

@@ -1,17 +1,24 @@
-"""Pallas TPU kernel: dense matching for BOTH views from one cost volume.
+"""Pallas TPU kernel: row-tiled dense matching for BOTH views.
 
-The heaviest stage (374.4 ms in the original design).  Per row block the
-kernel builds the (D, W) SAD volume once, re-derives the right-view volume
-as its diagonal (a beyond-paper fusion: the FPGA design computes the two
-views independently), adds the slanted-plane prior energy, restricts to the
-per-pixel candidate set with a compare-mask over the D axis (the grid-vector
-membership test as a vectorised predicate instead of a gather), and emits
-argmin disparities for both views.
+The heaviest stage (374.4 ms in the original design).  The kernel grid
+walks the image in row tiles of ``block_rows`` rows -- the software
+analogue of the FPGA's line-buffered tiling -- and per tile evaluates the
+matching energy ONLY over the per-pixel candidate window (the grid-vector
+prior bounds the disparity search, exactly as in the paper): C = 25
+candidates instead of the full D-slot volume.  The left and right views
+share the same SAD math with mirrored column lookups, so both disparity
+maps still come from one pass over the descriptors (a beyond-paper fusion:
+the FPGA design computes the two views independently).
 
-VMEM working set per program (defaults bh=4, W=640, D=64, C=25):
-  volumes   2 x (4, 64, 640) int32   ~ 1.3 MiB
-  energies  ~ (4, 64, 640) f32 x 2   ~ 1.3 MiB
-  candidates 2 x (4, 640, 25) int32  ~ 0.5 MiB
+VMEM working set per program (defaults bh=4, W=640, C=25, K=16):
+  gathered descriptors 2 x (4, 640, 25, 16) int8  ~ 2.0 MiB
+  SAD / energies       2 x (4, 640, 25) i32+f32   ~ 1.0 MiB
+  candidates           2 x (4, 640, 25) int32     ~ 0.5 MiB
+independent of D -- the full (bh, D, W) volume never exists.
+
+The body delegates to :func:`repro.kernels.ref.dense_match_rows_windowed_ref`
+so kernel == oracle by construction; the candidate gather lowers to a
+VMEM ``take_along_axis`` along the row axis.
 """
 from __future__ import annotations
 
@@ -40,7 +47,7 @@ def _dense_kernel(
     sigma: float,
     match_texture: int,
 ):
-    disp_l, disp_r = ref.dense_match_rows_ref(
+    disp_l, disp_r = ref.dense_match_rows_windowed_ref(
         desc_l_ref[...],
         desc_r_ref[...],
         mu_l_ref[...],
@@ -80,6 +87,9 @@ def dense_match_pallas(
     block_rows: int = 4,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
+    """Row-tiled candidate-window dense matching; ``block_rows`` is the
+    tile height (dense matching has no cross-row dependency, so any tile
+    height yields bitwise-identical output)."""
     h, w, k = desc_l.shape
     c = cand_l.shape[-1]
     bh = min(block_rows, h)

@@ -13,16 +13,23 @@ system between oracle and kernel execution is one registry name.  The name
 stays a jit-static string; the wrapper resolves it to a
 :class:`~repro.kernels.registry.KernelBackend` at trace time and dispatches
 through the registry rather than an if/elif ladder per op.
+
+Dense matching additionally accepts a
+:class:`~repro.core.tiling.TileSpec`: each backend declares its tiling
+capability in the registry, and the wrapper routes to the backend's
+row-tiled dense entry point (bitwise identical to the untiled path) when
+the caller asks for tiling and the backend supports it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.params import ElasParams
+from repro.core.tiling import TileCapability, TileSpec
 from repro.kernels import ref
 from repro.kernels.dense_match import dense_match_pallas
 from repro.kernels.median import median3x3_pallas
@@ -55,24 +62,40 @@ def _median3x3_ref(disp: jax.Array) -> jax.Array:
     )
 
 
+def _dense_tiled_ref(*args, **kwargs):
+    """Row-tiled XLA fallback (late import: core.dense builds on kernels)."""
+    from repro.core.dense import dense_match_tiled_xla
+
+    return dense_match_tiled_xla(*args, **kwargs)
+
+
 register_backend(KernelBackend(
     name="ref",
     sobel=_sobel_ref,
     support_match=ref.support_match_rows_ref,
     dense_match=ref.dense_match_rows_ref,
     median3x3=_median3x3_ref,
+    dense_match_tiled=_dense_tiled_ref,
+    tiling=TileCapability(tiled_dense=True, batched_map=True, default_rows=32),
     description="pure-jnp oracle math (XLA:CPU friendly)",
 ))
 
 
 # ------------------------------------------------------------ pallas backends
 def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBackend:
+    def dense_tiled(*args, tile_rows: int, **kwargs):
+        return dense_match_pallas(
+            *args, block_rows=tile_rows, interpret=interpret, **kwargs
+        )
+
     return KernelBackend(
         name=name,
         sobel=functools.partial(sobel_pallas, interpret=interpret),
         support_match=functools.partial(support_match_pallas, interpret=interpret),
         dense_match=functools.partial(dense_match_pallas, interpret=interpret),
         median3x3=functools.partial(median3x3_pallas, interpret=interpret),
+        dense_match_tiled=dense_tiled,
+        tiling=TileCapability(tiled_dense=True, default_rows=4, max_rows=64),
         description=description,
     )
 
@@ -113,8 +136,8 @@ def support_match(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
-def dense_match(
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def dense_match_candidates(
     desc_l: jax.Array,
     desc_r: jax.Array,
     mu_l: jax.Array,
@@ -123,15 +146,35 @@ def dense_match(
     cand_r: jax.Array,
     p: ElasParams,
     backend: Backend = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    return get_backend(backend).dense_match(
-        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
+    """Dense matching from pre-built candidate tensors.
+
+    With ``tile`` set, dispatches to the backend's declared row-tiled
+    dense entry point (clamped to the backend's capability); backends
+    without tiling support run their untiled path -- the output is
+    bitwise identical either way.
+    """
+    be = get_backend(backend)
+    kwargs = dict(
         num_disp=p.num_disp,
         beta=p.beta,
         gamma=p.gamma,
         sigma=p.sigma,
         match_texture=p.match_texture,
     )
+    eff = be.tiling.clamp(tile)
+    if eff is not None:
+        return be.dense_match_tiled(
+            desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
+            tile_rows=eff.rows, **kwargs,
+        )
+    return be.dense_match(desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, **kwargs)
+
+
+# Historical public name; the candidate tensors are always pre-built by
+# the caller, so the two entry points are one function.
+dense_match = dense_match_candidates
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

@@ -23,7 +23,9 @@ Built-in backends (registered by :mod:`repro.kernels.ops` on import):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.tiling import TileCapability
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +34,14 @@ class KernelBackend:
 
     The callables use keyword-exploded algorithm parameters (not
     ``ElasParams``) so each backend stays importable without the core
-    package and trivially testable against the others.
+    algorithm modules and trivially testable against the others.
+
+    Every backend also *declares its tiling capability*: ``tiling`` says
+    whether (and how) the backend can run the dense stage in row tiles,
+    and ``dense_match_tiled`` -- when declared -- is the tiled entry point
+    (same signature as ``dense_match`` plus ``tile_rows=``).  Callers pick
+    the path through :class:`~repro.core.tiling.TileCapability` rather
+    than hard-coding backend names.
     """
 
     name: str
@@ -40,11 +49,18 @@ class KernelBackend:
     support_match: Callable    # (desc_l_rows, desc_r_rows, **kw) -> grid
     dense_match: Callable      # (dl, dr, mu_l, mu_r, cand_l, cand_r, **kw)
     median3x3: Callable        # (disp) -> disp
+    dense_match_tiled: Optional[Callable] = None   # (..., tile_rows=, **kw)
+    tiling: TileCapability = TileCapability()
     description: str = ""
 
     def __post_init__(self):
         if not self.name:
             raise ValueError("backend name must be non-empty")
+        if self.tiling.tiled_dense and self.dense_match_tiled is None:
+            raise ValueError(
+                f"backend {self.name!r} declares tiled_dense but provides "
+                f"no dense_match_tiled callable"
+            )
 
 
 _REGISTRY: Dict[str, KernelBackend] = {}

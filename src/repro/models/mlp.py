@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
-from repro.models.config import ModelConfig
 
 
 def init_mlp_params(key: jax.Array, d_model: int, d_ff: int, act: str) -> dict:

@@ -18,7 +18,6 @@ Blocks by LayerKind:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

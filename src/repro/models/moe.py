@@ -18,7 +18,6 @@ top-2, every other layer).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ State is a pytree mirroring params, so the same sharding specs apply
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

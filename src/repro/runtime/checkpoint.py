@@ -41,7 +41,6 @@ class CheckpointManager:
         # and decouples the write from later in-place donations.
         leaves, treedef = jax.tree.flatten(tree)
         host_leaves = [np.asarray(x) for x in leaves]
-        spec = jax.tree.map(lambda _: 0, tree)          # structure skeleton
 
         def write():
             try:

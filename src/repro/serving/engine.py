@@ -17,7 +17,6 @@ the wave engine is the correctness reference the tests pin down.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,6 +19,16 @@ generalisation of both ideas for many concurrent streams:
   pre-compiles; :class:`ServiceStats` reports hits/misses, so "zero
   recompiles after warm-up" is an assertable property.
 
+* **Per-bucket auto-batching** -- with ``autobatch=True``, ``warmup()``
+  first benchmarks candidate wave widths per resolution bucket on dummy
+  frames and records the per-frame-fastest width; wave assembly then uses
+  that width for the bucket.  Wide waves win at small resolutions but lose
+  once per-frame intermediates outgrow per-core cache, so the right width
+  is resolution-dependent -- and with a ``tile``
+  (:class:`~repro.core.tiling.TileSpec`) the dense stage runs the flat
+  batch x row-tile grid one tile at a time, moving that crossover far to
+  the right (see ROADMAP "Tiled dense stage").
+
 * **Staged async pipeline** -- ingest/assembly, the support stage
   (descriptors + sparse support + the paper's interpolation), the dense
   stage (prior + dense matching + post-processing) and emit each run on
@@ -53,10 +63,11 @@ import numpy as np
 
 from repro.core.params import ElasParams
 from repro.core.pipeline import (
-    ielas_dense_stage,
+    ielas_dense_stage_batched,
     ielas_interpolate_stage,
     ielas_support_stage,
 )
+from repro.core.tiling import TileSpec
 
 _EOS = object()          # end-of-stream sentinel flowing through the stages
 
@@ -85,7 +96,7 @@ class ServiceStats:
     pending: int                   # submitted - completed - dropped
     waves: int
     padded_slots: int              # batch slots filled by padding, not work
-    wave_occupancy: float          # real frames / (waves * batch)
+    wave_occupancy: float          # real frames / total wave slots
     cache_hits: int
     cache_misses: int              # == wave programs compiled
     programs_cached: int
@@ -95,6 +106,8 @@ class ServiceStats:
     latency_p95_ms: float
     latency_max_ms: float
     throughput_fps: float          # completed / (last emit - first submit)
+    calibrations: int = 0          # auto-batch calibration passes run
+    batch_by_bucket: tuple = ()    # ((H, W), wave width) per calibrated bucket
 
 
 # ---------------------------------------------------------------------------
@@ -105,13 +118,15 @@ class WavePrograms:
     """The two compiled halves of one wave-shaped frame program."""
 
     key: tuple                     # (H, W) bucketed
+    batch: int                     # wave width the programs were traced at
     support: object                # (B,H,W)x2 -> (dl, dr, interpolated support)
     dense: object                  # (dl, dr, support) -> (B,H,W) disparity
 
 
 class FrameProgramCache:
     """Compiled wave programs keyed on ``(H, W)`` under fixed
-    ``(batch, backend, params)``, with optional resolution bucketing.
+    ``(backend, params)``, with optional resolution bucketing and a
+    per-bucket wave width.
 
     With ``bucket > 1`` a request's resolution is rounded up to the next
     bucket multiple, so nearby resolutions share one program (inputs are
@@ -119,10 +134,19 @@ class FrameProgramCache:
     ``bucket=1`` results are exact).  ``hits``/``misses`` count :meth:`get`
     resolutions; a miss is exactly one new program compilation, so a warmed
     cache serving repeated resolutions shows ``misses == 0``.
+
+    ``batch`` is the *maximum* wave width; :meth:`calibrate` benchmarks
+    candidate widths for one bucket on dummy frames and records the
+    fastest per-frame width, which :meth:`batch_for` then reports to wave
+    assembly (wave batching loses to narrower waves once per-frame
+    intermediates outgrow per-core cache, so the best width is
+    resolution-dependent).  ``tile`` threads a
+    :class:`~repro.core.tiling.TileSpec` into the dense-stage wave
+    program (bitwise identical; a memory-locality decision).
     """
 
     def __init__(self, params: ElasParams, batch: int, backend: str,
-                 bucket: int = 1):
+                 bucket: int = 1, tile: Optional[TileSpec] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if bucket < 1:
@@ -131,28 +155,46 @@ class FrameProgramCache:
         self.batch = batch
         self.backend = backend
         self.bucket = bucket
+        self.tile = tile
         self.hits = 0
         self.misses = 0
+        self.calibrations = 0
         self._lock = threading.Lock()
         self._programs: dict[tuple, WavePrograms] = {}
+        self._batch_choice: dict[tuple, int] = {}
 
     def bucket_shape(self, h: int, w: int) -> tuple[int, int]:
         b = self.bucket
         return (math.ceil(h / b) * b, math.ceil(w / b) * b)
 
+    def batch_for(self, h: int, w: int) -> int:
+        """Wave width for a *bucketed* shape (calibrated, or the default)."""
+        return self._batch_choice.get((h, w), self.batch)
+
+    def batch_choices(self) -> tuple:
+        with self._lock:
+            return tuple(sorted(self._batch_choice.items()))
+
     def __len__(self) -> int:
         return len(self._programs)
 
-    def get(self, h: int, w: int) -> WavePrograms:
-        """Resolve the wave program for a *bucketed* shape, compiling on miss."""
+    def get(self, h: int, w: int, batch: Optional[int] = None) -> WavePrograms:
+        """Resolve the wave program for a *bucketed* shape, compiling on miss.
+
+        ``batch`` is the wave width the caller actually assembled; a cached
+        program traced at a different width would silently retrace inside
+        jit, so a width mismatch (possible only if calibration raced live
+        traffic) is counted as an honest miss and rebuilt.
+        """
         key = (h, w)
+        want = batch if batch is not None else self.batch_for(*key)
         with self._lock:
             prog = self._programs.get(key)
-            if prog is not None:
+            if prog is not None and prog.batch == want:
                 self.hits += 1
                 return prog
             self.misses += 1
-            prog = self._build(key)
+            prog = self._build(key, want)
             self._programs[key] = prog
             return prog
 
@@ -163,28 +205,79 @@ class FrameProgramCache:
         with self._lock:
             prog = self._programs.get(key)
             if prog is None:
-                prog = self._build(key)
+                prog = self._build(key, self.batch_for(*key))
                 self._programs[key] = prog
-        zeros = jnp.zeros((self.batch, *key), jnp.float32)
-        dl, dr, sup = prog.support(zeros, zeros)
-        prog.dense(dl, dr, sup).block_until_ready()
+        self._run_dummy(prog)
         return prog
 
-    def _build(self, key: tuple) -> WavePrograms:
-        p, backend = self.params, self.backend
+    def calibrate(self, h: int, w: int,
+                  candidates: Optional[Sequence[int]] = None,
+                  reps: int = 2) -> int:
+        """Benchmark candidate wave widths for (h, w)'s bucket on dummy
+        frames; record and return the per-frame-fastest width.
+
+        The winning width's compiled programs are kept, so a calibrated
+        warm-up leaves the bucket hot (``misses == 0`` afterwards).
+        Idempotent per bucket: repeated calls return the recorded choice.
+        """
+        key = self.bucket_shape(h, w)
+        with self._lock:
+            if key in self._batch_choice:
+                return self._batch_choice[key]
+        if candidates is None:
+            candidates = _default_batch_candidates(self.batch)
+        best_b, best_t, best_prog = self.batch, float("inf"), None
+        for b in candidates:
+            b = max(1, min(int(b), self.batch))
+            prog = self._build(key, b)
+            self._run_dummy(prog)              # compile outside the timing
+            t = float("inf")
+            for _ in range(max(1, reps)):
+                t0 = time.perf_counter()
+                self._run_dummy(prog)
+                t = min(t, (time.perf_counter() - t0) / b)
+            if t < best_t:
+                best_b, best_t, best_prog = b, t, prog
+        with self._lock:
+            self._batch_choice[key] = best_b
+            self._programs[key] = best_prog
+            self.calibrations += 1
+        return best_b
+
+    def _run_dummy(self, prog: WavePrograms) -> None:
+        zeros = jnp.zeros((prog.batch, *prog.key), jnp.float32)
+        dl, dr, sup = prog.support(zeros, zeros)
+        prog.dense(dl, dr, sup).block_until_ready()
+
+    def _build(self, key: tuple, batch: int) -> WavePrograms:
+        p, backend, tile = self.params, self.backend, self.tile
 
         def support_one(left, right):
             dl, dr, sup = ielas_support_stage(left, right, p, backend=backend)
             return dl, dr, ielas_interpolate_stage(sup, p)
 
-        def dense_one(dl, dr, sup):
-            return ielas_dense_stage(dl, dr, sup, p, backend=backend)
+        def dense_wave(dl, dr, sup):
+            return ielas_dense_stage_batched(
+                dl, dr, sup, p, backend=backend, tile=tile
+            )
 
         return WavePrograms(
             key=key,
+            batch=batch,
             support=jax.jit(jax.vmap(support_one)),
-            dense=jax.jit(jax.vmap(dense_one)),
+            dense=jax.jit(dense_wave),
         )
+
+
+def _default_batch_candidates(batch: int) -> tuple:
+    """1, 2, 4, ... up to and including ``batch``."""
+    cands = []
+    b = 1
+    while b < batch:
+        cands.append(b)
+        b *= 2
+    cands.append(batch)
+    return tuple(cands)
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +319,11 @@ class StereoService:
     depth:       bound of each inter-stage queue (2 == ping-pong).
     backend:     kernel registry name ("ref" | "pallas" | "pallas_tpu").
     bucket:      resolution bucketing multiple (1 == exact shapes only).
+    tile:        TileSpec for the dense-stage wave program (None = untiled;
+                 tiling is bitwise identical, purely a locality decision).
+    autobatch:   benchmark candidate wave widths per resolution bucket at
+                 warmup() time and use the per-frame-fastest width for that
+                 bucket's waves (``batch`` remains the upper bound).
     wave_linger: how long assembly waits to fill a partial wave before
                  dispatching it padded (seconds).
     max_pending: ingest queue bound; submit() blocks beyond this
@@ -234,6 +332,7 @@ class StereoService:
 
     def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
                  backend: str = "ref", bucket: int = 1,
+                 tile: Optional[TileSpec] = None, autobatch: bool = False,
                  wave_linger: float = 0.002, max_pending: int = 64):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
@@ -241,8 +340,10 @@ class StereoService:
         self.batch = batch
         self.depth = depth
         self.backend = backend
+        self.autobatch = autobatch
         self.wave_linger = wave_linger
-        self._cache = FrameProgramCache(params, batch, backend, bucket=bucket)
+        self._cache = FrameProgramCache(params, batch, backend, bucket=bucket,
+                                        tile=tile)
 
         self._ingest: queue.Queue = queue.Queue(maxsize=max_pending)
         self._waves: queue.Queue = queue.Queue(maxsize=depth)
@@ -262,6 +363,7 @@ class StereoService:
         self._completed = 0
         self._dropped = 0
         self._waves_built = 0
+        self._wave_slots = 0
         self._padded_slots = 0
         self._backpressure_s = 0.0
         self._latencies: collections.deque = collections.deque(maxlen=4096)
@@ -345,9 +447,25 @@ class StereoService:
         return run
 
     # ------------------------------------------------------------------ api
-    def warmup(self, shapes: Sequence[tuple[int, int]]) -> None:
-        """Pre-compile wave programs for the given (H, W) resolutions."""
+    def warmup(self, shapes: Sequence[tuple[int, int]],
+               calibrate: Optional[bool] = None) -> None:
+        """Pre-compile wave programs for the given (H, W) resolutions.
+
+        With ``calibrate`` (default: the service's ``autobatch`` setting)
+        and ``batch > 1``, each resolution bucket first runs a tiny
+        calibration pass benchmarking candidate wave widths on dummy
+        frames; the winner becomes that bucket's wave width and its
+        compiled programs are kept, so the hot path still sees zero
+        recompiles after warm-up.
+        """
+        if calibrate is None:
+            calibrate = self.autobatch
         for h, w in shapes:
+            if calibrate and self.batch > 1:
+                before = self._cache.calibrations
+                self._cache.calibrate(h, w)
+                if self._cache.calibrations != before:
+                    continue    # the pass compiled + exercised the winner
             self._cache.warm(h, w)
 
     def submit(self, frame_id: int, left: np.ndarray, right: np.ndarray,
@@ -467,8 +585,8 @@ class StereoService:
                 waves=self._waves_built,
                 padded_slots=self._padded_slots,
                 wave_occupancy=(
-                    1.0 - self._padded_slots / (self._waves_built * self.batch)
-                    if self._waves_built else 0.0
+                    1.0 - self._padded_slots / self._wave_slots
+                    if self._wave_slots else 0.0
                 ),
                 cache_hits=self._cache.hits,
                 cache_misses=self._cache.misses,
@@ -479,6 +597,8 @@ class StereoService:
                 latency_p95_ms=p95 * 1e3,
                 latency_max_ms=self._lat_max * 1e3,
                 throughput_fps=(self._completed / span) if span > 0 else 0.0,
+                calibrations=self._cache.calibrations,
+                batch_by_bucket=self._cache.batch_choices(),
             )
 
     # ------------------------------------------------------- stage plumbing
@@ -514,12 +634,14 @@ class StereoService:
                     continue
 
             # Fill the head-of-line wave: linger briefly for same-bucket
-            # requests, then dispatch padded rather than stall.
+            # requests, then dispatch padded rather than stall.  The wave
+            # width is the bucket's (possibly calibrated) batch.
             key = self._cache.bucket_shape(pending[0].h, pending[0].w)
+            width = self._cache.batch_for(*key)
             deadline = time.monotonic() + self.wave_linger
             while (not draining
                    and sum(self._cache.bucket_shape(r.h, r.w) == key
-                           for r in pending) < self.batch):
+                           for r in pending) < width):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
@@ -530,18 +652,18 @@ class StereoService:
 
             wave_reqs, rest = [], collections.deque()
             for r in pending:
-                if (len(wave_reqs) < self.batch
+                if (len(wave_reqs) < width
                         and self._cache.bucket_shape(r.h, r.w) == key):
                     wave_reqs.append(r)
                 else:
                     rest.append(r)
             pending = rest
-            if not self._put(self._waves, self._build_wave(key, wave_reqs)):
+            if not self._put(self._waves, self._build_wave(key, wave_reqs, width)):
                 return
 
-    def _build_wave(self, key: tuple, reqs: list) -> _Wave:
+    def _build_wave(self, key: tuple, reqs: list, width: int) -> _Wave:
         bh, bw = key
-        pad = self.batch - len(reqs)
+        pad = width - len(reqs)
 
         def fit(img: np.ndarray) -> np.ndarray:
             h, w = img.shape
@@ -558,6 +680,7 @@ class StereoService:
             r.left = r.right = None     # the host frames while waves are queued
         with self._slock:
             self._waves_built += 1
+            self._wave_slots += width
             self._padded_slots += pad
         return _Wave(
             key=key, requests=reqs,
@@ -574,7 +697,8 @@ class StereoService:
             if wave is _EOS:
                 self._put(self._mid, _EOS)
                 return
-            wave.programs = self._cache.get(*wave.key)
+            wave.programs = self._cache.get(*wave.key,
+                                            batch=int(wave.left.shape[0]))
             wave.mid = wave.programs.support(wave.left, wave.right)
             wave.left = wave.right = None
             if not self._put(self._mid, wave):

@@ -1,0 +1,166 @@
+"""Tiled dense-matching path: bitwise identity against the untiled
+reference across registry backends, tile heights, odd image sizes, and
+partial last tiles -- plus TileSpec/TileCapability semantics and the
+auto-batch calibration in StereoService.
+
+Dense matching has no cross-row data dependency, so row tiling (and the
+candidate-window evaluation it uses) must be *bitwise* invisible; these
+tests pin that property, which is what makes tiling a pure
+memory-locality decision for the serving engine.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs.elas_stereo import SYNTH
+from repro.core import pipeline
+from repro.core.tiling import TileCapability, TileSpec
+from repro.data.stereo import synthetic_stereo_pair
+from repro.kernels.registry import available_backends, get_backend
+from repro.serving.stereo_service import StereoService, _default_batch_candidates
+
+P = SYNTH.params
+
+
+def _scene(h=57, w=83, seed=11):
+    il, ir, _ = synthetic_stereo_pair(height=h, width=w, d_max=24, seed=seed)
+    return jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def untiled_maps():
+    il, ir = _scene()
+    return il, ir, np.asarray(pipeline.ielas_disparity(il, ir, P))
+
+
+class TestTileSpec:
+    def test_validation_and_tile_math(self):
+        with pytest.raises(ValueError):
+            TileSpec(rows=0)
+        t = TileSpec(rows=16)
+        assert t.num_tiles(57) == 4            # partial last tile
+        assert t.padded_height(57) == 64
+        assert t.num_tiles(64) == 4 and t.padded_height(64) == 64
+
+    def test_for_cache_respects_budget(self):
+        t = TileSpec.for_cache(width=640, num_candidates=25,
+                               budget_bytes=1 << 20)
+        assert 1 <= t.rows <= 64
+        assert t.rows * 640 * 25 * 8 <= (1 << 20) + 640 * 25 * 8
+
+    def test_capability_clamp(self):
+        cap = TileCapability(tiled_dense=True, max_rows=8)
+        assert cap.clamp(TileSpec(rows=32)) == TileSpec(rows=8)
+        assert cap.clamp(TileSpec(rows=4)) == TileSpec(rows=4)
+        assert cap.clamp(None) is None
+        assert TileCapability().clamp(TileSpec(rows=4)) is None
+        assert TileCapability().default_tile() is None
+        assert cap.default_tile() == TileSpec(rows=16)
+
+
+class TestBackendsDeclareTiling:
+    def test_all_builtin_backends_declare_tiled_dense(self):
+        for name in available_backends():
+            be = get_backend(name)
+            assert isinstance(be.tiling, TileCapability)
+            if be.tiling.tiled_dense:
+                assert callable(be.dense_match_tiled)
+
+    def test_ref_backend_uses_batched_map(self):
+        assert get_backend("ref").tiling.batched_map
+
+
+class TestTiledBitwiseIdentity:
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("rows", [1, 3, 16, 57, 100])
+    def test_tiled_equals_untiled(self, untiled_maps, backend, rows):
+        """Odd 57x83 frame: every tile height (including a full-image tile
+        and partial last tiles) is bitwise identical to the untiled
+        reference, for every backend that runs on CPU."""
+        il, ir, base = untiled_maps
+        tiled = np.asarray(pipeline.ielas_disparity(
+            il, ir, P, backend=backend, tile=TileSpec(rows=rows)
+        ))
+        np.testing.assert_array_equal(tiled, base)
+
+    def test_batched_stage_matches_vmapped_untiled(self, untiled_maps):
+        il, ir, base = untiled_maps
+        dl, dr, sup = pipeline.ielas_support_stage(il, ir, P)
+        sup = pipeline.ielas_interpolate_stage(sup, P)
+        def stack(x):
+            return jnp.stack([x] * 3)
+
+        out = np.asarray(pipeline.ielas_dense_stage_batched(
+            stack(dl), stack(dr), stack(sup), P, tile=TileSpec(rows=16)
+        ))
+        for b in range(3):
+            np.testing.assert_array_equal(out[b], base)
+
+    @given(
+        rows=st.integers(1, 70),
+        h=st.integers(41, 71),
+        w=st.integers(60, 100),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_tiling_invisible(self, rows, h, w, seed):
+        """Random tile heights x odd image sizes x partial last tiles:
+        tiling never changes a single output bit."""
+        il, ir = _scene(h=h, w=w, seed=seed)
+        base = np.asarray(pipeline.ielas_disparity(il, ir, P))
+        tiled = np.asarray(pipeline.ielas_disparity(
+            il, ir, P, tile=TileSpec(rows=rows)
+        ))
+        np.testing.assert_array_equal(tiled, base)
+
+
+class TestServiceAutoBatch:
+    def test_default_candidates(self):
+        assert _default_batch_candidates(1) == (1,)
+        assert _default_batch_candidates(4) == (1, 2, 4)
+        assert _default_batch_candidates(6) == (1, 2, 4, 6)
+
+    def test_calibrated_service_stays_bitwise_and_warm(self):
+        frames = [
+            synthetic_stereo_pair(height=48, width=64, d_max=24, seed=s)[:2]
+            for s in range(5)
+        ]
+        svc = StereoService(P, batch=4, depth=2, wave_linger=0.05,
+                            tile=TileSpec(rows=16), autobatch=True).start()
+        try:
+            svc.warmup([(48, 64)])
+            st_warm = svc.stats()
+            assert st_warm.calibrations == 1
+            assert st_warm.cache_misses == 0
+            ((bucket, width),) = st_warm.batch_by_bucket
+            assert bucket == (48, 64) and 1 <= width <= 4
+            for i, (l, r) in enumerate(frames):
+                svc.submit(i, l, r)
+            done = svc.collect(5, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 5
+        assert st.cache_misses == 0, "recompile on the hot path after warm-up"
+        for c in done:
+            l, r = frames[c.frame_id]
+            direct = np.asarray(pipeline.ielas_disparity(
+                jnp.asarray(l, jnp.float32), jnp.asarray(r, jnp.float32), P
+            ))
+            np.testing.assert_array_equal(c.disparity, direct)
+
+    def test_calibration_is_per_bucket_and_idempotent(self):
+        svc = StereoService(P, batch=2, bucket=16, autobatch=True)
+        svc.warmup([(40, 64), (45, 60)])     # same (48, 64) bucket
+        assert svc.stats().calibrations == 1
+        svc.warmup([(40, 64)])               # idempotent
+        assert svc.stats().calibrations == 1
+
+    def test_uncalibrated_service_uses_fixed_batch(self):
+        svc = StereoService(P, batch=3)
+        svc.warmup([(40, 64)])
+        st = svc.stats()
+        assert st.calibrations == 0 and st.batch_by_bucket == ()
+        assert svc._cache.batch_for(40, 64) == 3

@@ -1,7 +1,6 @@
 """Flash-attention Pallas kernel vs plain-softmax oracle: shape/dtype
 sweeps, causal and non-causal, block-size invariance, and agreement with
 the model-level blockwise attention."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes and input regimes, plus hypothesis property checks."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +7,6 @@ import pytest
 from hypothesis_compat import given, hnp, settings, st
 
 from repro.core import descriptor as desc_mod
-from repro.core.params import ElasParams
 from repro.kernels import ops, ref
 from repro.kernels.dense_match import dense_match_pallas
 from repro.kernels.median import median3x3_pallas

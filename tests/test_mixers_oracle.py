@@ -1,7 +1,6 @@
 """Sequence-mixer oracles: the chunked/parallel implementations must match
 naive step-by-step recurrences, and full-sequence must match incremental
 decode -- the invariants that make 500k-context serving trustworthy."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.models.attention import blockwise_attention
-from repro.models.config import LayerKind, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.model import LMModel
 
 

@@ -11,7 +11,7 @@ from repro.data.tokens import TokenPipeline
 from repro.distributed.sharding import (
     REPLICATED_RULES, ShardingRules, logical_to_spec, use_rules,
 )
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import (
     BLOCK, compression_ratio, ef_compress, ef_decompress,
 )
@@ -174,7 +174,8 @@ class TestCheckpoint:
 class TestHeartbeat:
     def test_dead_and_straggler_detection(self):
         t = [0.0]
-        clock = lambda: t[0]
+        def clock():
+            return t[0]
         mon = HeartbeatMonitor(["h0", "h1", "h2"], timeout=10.0,
                                straggler_factor=2.0, clock=clock)
         # one shared timeline: h0 beats every 1s through t=12; h1 stops

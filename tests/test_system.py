@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import pipeline
-from repro.core.params import SYNTHETIC_BENCH_PARAMS, ElasParams
+from repro.core.params import SYNTHETIC_BENCH_PARAMS
 from repro.data.stereo import LIGHTING_CONDITIONS, synthetic_stereo_pair
 
 

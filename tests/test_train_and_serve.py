@@ -5,15 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
 from repro.configs.elas_stereo import SYNTH
 from repro.data.stereo import synthetic_stereo_pair
 from repro.data.tokens import pipeline_for
-from repro.models.config import LayerKind, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.model import LMModel
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedule import ScheduleConfig
-from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.train_loop import (
     SimulatedNodeFailure, TrainConfig, Trainer, make_train_step,
 )
