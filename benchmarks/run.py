@@ -31,8 +31,10 @@ Flags:
     compare fps-bearing rows against a checked-in baseline JSON
     (``benchmarks/baseline_ci.json``); exit non-zero if any regresses by
     more than ``T`` (default 0.30, i.e. >30% slower fails).  The baseline
-    pins ``table4/dense_stage`` -- the row-tiled dense stage, the metric
-    the tiling work optimises.
+    pins the per-stage breakdown: ``table4/support_stage`` (the streaming
+    row-block-tiled support search) and ``table4/dense_stage`` (the
+    row-tiled dense stage) -- the two metrics the streaming/tiling work
+    optimises.
 
 Regenerating the baseline after an intentional perf change::
 

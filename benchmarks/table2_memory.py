@@ -27,14 +27,31 @@ def _stage_bytes(height: int, width: int, p) -> dict:
     }
 
 
-def _kernel_vmem(width: int, num_disp: int, num_cand: int = 25) -> dict:
-    """VMEM working set per kernel program instance (from BlockSpecs)."""
+def _kernel_vmem(width: int, num_disp: int, num_cand: int = 25,
+                 step: int = 5) -> dict:
+    """VMEM working set per kernel program instance (from BlockSpecs).
+
+    Both disparity searches stream the d axis: the support kernel's live
+    set is one cost row plus the 4-deep (value, d) running-best registers
+    -- O(W), constant in num_disp -- and the dense kernel evaluates only
+    the per-pixel candidate window.  The (bh, D, W) volumes of the
+    materialised oracle exist in no kernel (the untiled dense path
+    likewise streams d; see repro.kernels.ref).
+    """
     bh_sobel, bh_support, bh_dense = 8, 4, 4
+    gw = width // step
     return {
         "sobel": 3 * bh_sobel * (width + 2) * 4 + 2 * bh_sobel * width,
+        # Streaming support search: descriptors (the right view left-padded
+        # by D for the shifted slices), ONE live cost row + its diagonal
+        # shift, and 4-deep (value, d) registers for the right view at
+        # every column and the left view at the candidate columns.
         "support_match": (
-            2 * bh_support * width * 16                       # descriptors
-            + 2 * bh_support * num_disp * width * 4           # CV + diagonal
+            bh_support * width * 16                           # left descriptors
+            + bh_support * (width + num_disp) * 16            # right, padded
+            + 2 * bh_support * width * 4                      # live cost + diag row
+            + 8 * bh_support * width * 4                      # right-view registers
+            + 8 * bh_support * gw * 4                         # left-view registers
         ),
         # Candidate-window dense matching: the working set scales with the
         # candidate count (20 + 5), NOT num_disp -- the (bh, D, W) volume
@@ -62,7 +79,7 @@ def run() -> list[str]:
             f"{st['descriptors_if_materialised']};saving={saving:.1f}x"
             f";gridvec_saving={gv_saving:.1f}x",
         ))
-        vm = _kernel_vmem(w, p.num_disp)
+        vm = _kernel_vmem(w, p.num_disp, step=p.candidate_step)
         budget = 16 * 1024 * 1024
         for k, b in vm.items():
             rows.append(row(

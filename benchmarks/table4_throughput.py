@@ -3,13 +3,18 @@
 Paper: 57.6 fps (iELAS) vs 17.6 fps (FPGA+ARM) vs 1.5-3 fps (i7) -- the
 speedup comes from eliminating the host round-trip for triangulation.
 
-Here (CPU backend; relative numbers are the claim):
-  * ielas       -- single jitted program per frame,
-  * dense_stage -- the row-tiled dense stage alone (the CI smoke gate's
-                   metric: benchmarks/baseline_ci.json pins its fps),
-  * hybrid      -- device front half -> host scipy Delaunay -> device back
-                   half (the [6] structure),
-  * service     -- the ping-pong StereoService (overlap of ingest/compute),
+Here (CPU backend; relative numbers are the claim), a per-stage breakdown
+mirroring the paper's module timing table:
+  * ielas         -- single jitted program per frame,
+  * support_stage -- the row-block-tiled streaming support search (the
+                     271.6 ms module of the original design; gated in
+                     benchmarks/baseline_ci.json),
+  * interp_stage  -- the paper's regularized interpolation,
+  * dense_stage   -- the row-tiled dense stage (gated in
+                     benchmarks/baseline_ci.json),
+  * hybrid        -- device front half -> host scipy Delaunay -> device
+                     back half (the [6] structure),
+  * service       -- the ping-pong StereoService (overlap of ingest/compute),
 plus the analytic TPU-v5e projection: bytes-bound fps from the pipeline's
 HBM traffic (the stereo pipeline is strongly memory-bound on TPU).
 """
@@ -46,9 +51,9 @@ def _tpu_projection(h: int, w: int, p) -> float:
 
 
 def run(height: int = 120, width: int = 160, frames: int = 6,
-        tile_rows: int = 32) -> list[str]:
+        tile_rows: int = 32, support_rows: int = 8) -> list[str]:
     p = SYNTH.params
-    tile = TileSpec(rows=tile_rows)
+    tile = TileSpec(rows=tile_rows, support_rows=support_rows)
     rows = []
     il, ir, gt = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=3)
     il_j = jnp.asarray(il, jnp.float32)
@@ -59,9 +64,22 @@ def run(height: int = 120, width: int = 160, frames: int = 6,
     )
     rows.append(row("table4/ielas", us_ielas, f"fps={1e6/us_ielas:.1f}"))
 
-    # -- the row-tiled dense stage alone (the CI smoke gate's metric) --------
-    dl, dr, sup = pipeline.ielas_support_stage(il_j, ir_j, p)
-    sup = pipeline.ielas_interpolate_stage(sup, p)
+    # -- per-stage breakdown (support and dense are the CI smoke gates) ------
+    us_support = time_call(
+        lambda a, b: pipeline.ielas_support_stage(a, b, p, tile=tile),
+        il_j, ir_j,
+    )
+    rows.append(row(
+        "table4/support_stage", us_support,
+        f"fps={1e6/us_support:.1f} support_rows={tile.support_block_rows}",
+    ))
+    dl, dr, sup_sparse = pipeline.ielas_support_stage(il_j, ir_j, p, tile=tile)
+    us_interp = time_call(
+        lambda s: pipeline.ielas_interpolate_stage(s, p), sup_sparse
+    )
+    rows.append(row("table4/interp_stage", us_interp,
+                    f"fps={1e6/us_interp:.1f}"))
+    sup = pipeline.ielas_interpolate_stage(sup_sparse, p)
     us_dense = time_call(
         lambda a, b, s: pipeline.ielas_dense_stage(a, b, s, p, tile=tile),
         dl, dr, sup,

@@ -9,9 +9,11 @@ plus ``2*plane_radius+1`` candidates around the plane prior mu(p).  The
 candidate count is static (paper: 20 + 5).
 
 The math (cost volume from shifted slices, candidate restriction as a mask
-over the disparity axis, both views from one volume) lives in
-:mod:`repro.kernels.ref`; this module builds the candidate tensors and owns
-the *tiled* execution strategies:
+over the disparity axis, both views from one volume -- and, on the untiled
+"ref" path, the streaming scan over d that replaces the materialised
+volume with running-best registers) lives in :mod:`repro.kernels.ref`;
+this module builds the candidate tensors and owns the *tiled* execution
+strategies:
 
 * :func:`dense_match_tiled_xla` -- the XLA fallback: walk the flat
   batch x row-tile grid with ``lax.map``, evaluating each tile over its

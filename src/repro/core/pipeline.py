@@ -25,11 +25,16 @@ support and dense halves as separate wave programs so consecutive waves
 overlap across stages — the service-level analogue of the paper's
 ping-pong BRAMs.
 
-The dense stage accepts a :class:`~repro.core.tiling.TileSpec`: with one,
-dense matching runs in row tiles over the per-pixel candidate window (the
-software analogue of the FPGA's line-buffered tiling), bitwise identical
-to the untiled path; :func:`ielas_dense_stage_batched` is the wave-shaped
-variant that walks the flat batch x tile grid one tile at a time.
+The dense AND support stages accept a
+:class:`~repro.core.tiling.TileSpec`: with one, dense matching runs in row
+tiles over the per-pixel candidate window (the software analogue of the
+FPGA's line-buffered tiling) and the support search runs in row blocks of
+candidate-grid rows through the streaming disparity scan -- both bitwise
+identical to the untiled paths; the ``*_batched`` variants are the
+wave-shaped forms that walk the flat batch x tile grid one tile at a
+time.  Untiled or not, no stage materialises a ``(rows, D, W)`` cost
+volume: the disparity axis is streamed with running-best registers
+(:mod:`repro.kernels.ref`).
 """
 from __future__ import annotations
 
@@ -53,7 +58,7 @@ from repro.core.interpolation import interpolate_support
 from repro.core.params import ElasParams
 from repro.core.postprocess import postprocess
 from repro.core.prior import plane_prior, right_view_support
-from repro.core.support import extract_support_grid
+from repro.core.support import descriptors_and_support, extract_support_grid_batched
 from repro.core.tiling import TileSpec
 
 
@@ -130,20 +135,55 @@ def ielas_disparity(
     tile: Optional[TileSpec] = None,
 ) -> jax.Array:
     """iELAS: fully on-device, single static XLA program. (H, W) float32."""
-    dl, dr, support = ielas_support_stage(img_left, img_right, p, backend=backend)
+    dl, dr, support = ielas_support_stage(
+        img_left, img_right, p, backend=backend, tile=tile
+    )
     support = ielas_interpolate_stage(support, p)
     return ielas_dense_stage(dl, dr, support, p, backend=backend, tile=tile)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def ielas_support_stage(
-    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+    img_left: jax.Array,
+    img_right: jax.Array,
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Front half (descriptors + filtered sparse support); also the baseline's."""
-    dl = desc_mod.extract(img_left)
-    dr = desc_mod.extract(img_right)
-    support = extract_support_grid(dl, dr, p, backend=backend)
+    """Front half (descriptors + filtered sparse support); also the baseline's.
+
+    With a ``tile``, the support search runs the backend's row-block-tiled
+    path (``tile.support_block_rows`` candidate-grid rows per block) --
+    bitwise identical to untiled.
+    """
+    dl, dr, support = descriptors_and_support(
+        img_left, img_right, p, backend=backend, tile=tile
+    )
     support = filter_support(support, p)
+    return dl, dr, support
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def ielas_support_stage_batched(
+    img_left: jax.Array,       # (B, H, W)
+    img_right: jax.Array,
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Wave-shaped support stage: (dl, dr, filtered support) with leading B.
+
+    Descriptor extraction and filtering are vmapped (small); the support
+    search itself goes through
+    :func:`~repro.core.support.extract_support_grid_batched`, which with a
+    ``tile`` walks the flat batch x row-block grid one block at a time
+    instead of running every frame's scan concurrently.  Bitwise identical
+    to vmapping :func:`ielas_support_stage` over the wave.
+    """
+    dl = jax.vmap(desc_mod.extract)(img_left)
+    dr = jax.vmap(desc_mod.extract)(img_right)
+    support = extract_support_grid_batched(dl, dr, p, backend=backend, tile=tile)
+    support = jax.vmap(lambda s: filter_support(s, p))(support)
     return dl, dr, support
 
 

@@ -8,20 +8,31 @@ with the tests the iELAS paper keeps on-chip.
 
 The math lives in :mod:`repro.kernels.ref` (the regularised cost-volume
 formulation shared with the Pallas kernels); this module handles the grid
-bookkeeping.  The result is a DENSE (GH, GW) float32 grid with
-``invalid = -1`` sentinels: keeping the sparse set dense-on-a-grid is the
-representational move that makes every later stage (filtering, the paper's
-interpolation, the regular triangulation) a static-shape vectorised op.
+bookkeeping and owns the *tiled* execution strategy,
+:func:`support_match_tiled_xla`: walk the flat batch x row-block grid with
+``lax.map``, each block running the streaming disparity scan
+(:func:`repro.kernels.ref.support_match_rows_streaming`), so the live
+working set is one block's O(W) running-best registers -- never a
+``(rows, D, W)`` volume.  Support rows are independent of each other (each
+candidate row matches against its own descriptor row only), so row-block
+tiling is bitwise invisible, exactly as for the dense stage.
+
+The result is a DENSE (GH, GW) float32 grid with ``invalid = -1``
+sentinels: keeping the sparse set dense-on-a-grid is the representational
+move that makes every later stage (filtering, the paper's interpolation,
+the regular triangulation) a static-shape vectorised op.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import descriptor as desc_mod
 from repro.core.params import ElasParams
+from repro.core.tiling import TileSpec
 
 INVALID = -1.0
 
@@ -38,11 +49,73 @@ def candidate_coords(height: int, width: int, step: int) -> tuple[jax.Array, jax
     return vs, us
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_disp", "step", "offset", "support_texture", "support_ratio",
+        "lr_threshold", "disp_min", "tile_rows",
+    ),
+)
+def support_match_tiled_xla(
+    desc_l_rows: jax.Array,     # (GH, W, 16) or (B, GH, W, 16) int8
+    desc_r_rows: jax.Array,
+    *,
+    num_disp: int,
+    step: int,
+    offset: int,
+    support_texture: int,
+    support_ratio: float,
+    lr_threshold: int,
+    disp_min: int,
+    tile_rows: int = 16,
+) -> jax.Array:
+    """Row-block-tiled XLA support search over the flat batch x block grid.
+
+    ``lax.map`` runs one block of ``tile_rows`` candidate rows at a time
+    through the streaming disparity scan, so the live working set is one
+    block's O(W) registers -- constant in both ``num_disp`` and the wave
+    width.  Accepts single frames or a leading batch axis (the batch and
+    block axes are flattened together, so block j of frame i never waits
+    for the whole of frame i-1).  Bitwise identical to the untiled oracle
+    for any block height: support rows have no cross-row dependency, and
+    zero-padded rows in a partial last block are cropped before return.
+    """
+    from repro.kernels import ref as _ref   # late import: kernels build on core
+
+    batched = desc_l_rows.ndim == 4
+    if not batched:
+        desc_l_rows, desc_r_rows = desc_l_rows[None], desc_r_rows[None]
+    b, gh, w, k = desc_l_rows.shape
+    gw = w // step
+    bh = min(tile_rows, gh)
+    t = -(-gh // bh)
+    pad = t * bh - gh
+
+    def split(x: jax.Array) -> jax.Array:
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.reshape(b * t, bh, w, k)
+
+    def one_block(block):
+        bl, br = block
+        return _ref.support_match_rows_streaming(
+            bl, br,
+            num_disp=num_disp, step=step, offset=offset,
+            support_texture=support_texture, support_ratio=support_ratio,
+            lr_threshold=lr_threshold, disp_min=disp_min,
+        )
+
+    grid = jax.lax.map(one_block, (split(desc_l_rows), split(desc_r_rows)))
+    grid = grid.reshape(b, t * bh, gw)[:, :gh]
+    return grid if batched else grid[0]
+
+
 def extract_support_grid(
     desc_left: jax.Array,      # (H, W, 16) int8
     desc_right: jax.Array,     # (H, W, 16) int8
     p: ElasParams,
     backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
     """Dense support grid (GH, GW) float32, INVALID where no confident match."""
     from repro.kernels import ops   # late import: kernels build on core.params
@@ -51,13 +124,64 @@ def extract_support_grid(
     vs, _ = candidate_coords(h, w, p.candidate_step)
     rows_l = desc_left[vs]          # (GH, W, 16)
     rows_r = desc_right[vs]         # (GH, W, 16)
-    return ops.support_match(rows_l, rows_r, p, backend=backend)
+    return ops.support_match(rows_l, rows_r, p, backend=backend, tile=tile)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
-def support_from_images(
-    img_left: jax.Array, img_right: jax.Array, p: ElasParams, backend: str = "ref"
+def extract_support_grid_batched(
+    desc_left: jax.Array,      # (B, H, W, 16) int8
+    desc_right: jax.Array,     # (B, H, W, 16) int8
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
+    """Wave-shaped support grids (B, GH, GW).
+
+    With a ``tile`` and a backend whose capability includes
+    ``batched_map``, the whole wave runs through the flat batch x
+    row-block ``lax.map`` grid (one block live at a time); otherwise the
+    per-frame path is vmapped.  Bitwise identical either way.
+    """
+    from repro.kernels import ops
+    from repro.kernels.registry import get_backend
+
+    h, w = desc_left.shape[1:3]
+    vs, _ = candidate_coords(h, w, p.candidate_step)
+    rows_l = desc_left[:, vs]       # (B, GH, W, 16)
+    rows_r = desc_right[:, vs]
+    be = get_backend(backend)
+    if be.tiling.clamp_support(tile) is not None and be.tiling.batched_map:
+        return ops.support_match(rows_l, rows_r, p, backend=backend, tile=tile)
+    return jax.vmap(
+        lambda a, b: ops.support_match(a, b, p, backend=backend, tile=tile)
+    )(rows_l, rows_r)
+
+
+def descriptors_and_support(
+    img_left: jax.Array,
+    img_right: jax.Array,
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Descriptors for both views + the (unfiltered) support grid.
+
+    The single home for the descriptor-extraction + support-matching
+    front half; :func:`support_from_images` and
+    :func:`repro.core.pipeline.ielas_support_stage` both delegate here.
+    """
     dl = desc_mod.extract(img_left)
     dr = desc_mod.extract(img_right)
-    return extract_support_grid(dl, dr, p, backend=backend)
+    return dl, dr, extract_support_grid(dl, dr, p, backend=backend, tile=tile)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def support_from_images(
+    img_left: jax.Array,
+    img_right: jax.Array,
+    p: ElasParams,
+    backend: str = "ref",
+    tile: Optional[TileSpec] = None,
+) -> jax.Array:
+    return descriptors_and_support(
+        img_left, img_right, p, backend=backend, tile=tile
+    )[2]

@@ -1,22 +1,28 @@
-"""Row-tile specifications for the dense-matching stage.
+"""Row-tile specifications for the dense-matching AND support stages.
 
-The iELAS FPGA keeps the dense-matching working set on-chip with
-line-buffered tiling and ping-pong BRAMs; the software analogue is to
-process the image in fixed-height row tiles whose intermediates fit the
-per-core cache instead of materialising a full ``(B, H, W, D)`` cost
-volume.  Dense matching has no cross-row data dependencies (the cost
-volume is built row by row), so any row tiling is *bitwise* equivalent to
-the untiled computation -- tiling is purely a memory-locality decision.
+The iELAS FPGA keeps the matching working sets on-chip with line-buffered
+tiling and ping-pong BRAMs; the software analogue is to process the image
+in fixed-height row tiles whose intermediates fit the per-core cache
+instead of materialising a full ``(B, H, W, D)`` cost volume.  Neither
+dense matching nor the support-point search has cross-row data
+dependencies (the cost volume is built row by row), so any row tiling is
+*bitwise* equivalent to the untiled computation -- tiling is purely a
+memory-locality decision.
 
 Two small types live here:
 
-* :class:`TileSpec` -- how a caller wants the dense stage tiled.  Frozen
-  and hashable so it can travel through ``jax.jit`` as a static argument
-  alongside ``ElasParams``.
+* :class:`TileSpec` -- how a caller wants the stages tiled: ``rows`` image
+  rows per dense tile, and optionally ``support_rows`` candidate-grid rows
+  per support block (defaulting to ``rows``).  Frozen and hashable so it
+  can travel through ``jax.jit`` as a static argument alongside
+  ``ElasParams``.
 * :class:`TileCapability` -- what a kernel backend *declares* it can do
-  (see :mod:`repro.kernels.registry`).  Callers consult it to pick between
-  the backend's tiled entry point, a batched ``lax.map`` fallback, and the
-  plain untiled path.
+  (see :mod:`repro.kernels.registry`), per stage: ``tiled_dense`` /
+  ``tiled_support`` entry points, preferred and maximum block heights, and
+  whether the tiled entries natively walk a flat batch x block grid
+  (``batched_map``).  Callers consult it to pick between the backend's
+  tiled entry point, a batched ``lax.map`` fallback, and the plain
+  untiled path.
 
 This module is dependency-free (stdlib only) so the kernel registry can
 import it without pulling in the rest of the core package.
@@ -29,18 +35,31 @@ from typing import Optional
 
 @dataclasses.dataclass(frozen=True)
 class TileSpec:
-    """How to tile the dense stage: ``rows`` image rows per tile.
+    """How to tile the matching stages.
 
-    ``rows`` must be positive; the last tile of an image whose height is
-    not a multiple of ``rows`` is padded and cropped (a partial tile), so
-    odd image sizes need no special handling by callers.
+    ``rows`` is the dense-stage tile height in image rows;
+    ``support_rows`` is the support-stage block height in *candidate-grid*
+    rows (one grid row per ``candidate_step`` image rows) and defaults to
+    ``rows`` when unset.  Both must be positive; the last tile of an
+    extent that is not a multiple of the tile height is padded and cropped
+    (a partial tile), so odd sizes need no special handling by callers.
     """
 
     rows: int = 16
+    support_rows: Optional[int] = None
 
     def __post_init__(self):
         if self.rows < 1:
             raise ValueError(f"tile rows must be >= 1, got {self.rows}")
+        if self.support_rows is not None and self.support_rows < 1:
+            raise ValueError(
+                f"support tile rows must be >= 1, got {self.support_rows}"
+            )
+
+    @property
+    def support_block_rows(self) -> int:
+        """Support-stage block height (grid rows); falls back to ``rows``."""
+        return self.rows if self.support_rows is None else self.support_rows
 
     def num_tiles(self, height: int) -> int:
         """Tiles covering ``height`` rows (the last one possibly partial)."""
@@ -69,32 +88,58 @@ class TileSpec:
 
 @dataclasses.dataclass(frozen=True)
 class TileCapability:
-    """A kernel backend's declared dense-stage tiling support.
+    """A kernel backend's declared per-stage tiling support.
 
     ``tiled_dense``
         the backend has a row-tiled dense entry point (``dense_match_tiled``
         in the registry) accepting ``tile_rows=``.
+    ``tiled_support``
+        the backend has a row-block-tiled support entry point
+        (``support_match_tiled`` in the registry) accepting ``tile_rows=``
+        in candidate-grid rows.
     ``batched_map``
-        that entry point natively accepts a leading batch axis and walks
-        the flat batch x tile grid itself (the ``lax.map`` fallback); when
-        False, batched callers ``vmap`` the per-frame tiled call instead.
+        the tiled entry points natively accept a leading batch axis and
+        walk the flat batch x block grid themselves (the ``lax.map``
+        fallback); when False, batched callers ``vmap`` the per-frame
+        tiled call instead.
     ``default_rows`` / ``max_rows``
-        the tile height the backend prefers, and an optional hard cap
-        (e.g. a VMEM bound for a compiled kernel).
+        the dense tile height the backend prefers, and an optional hard
+        cap (e.g. a VMEM bound for a compiled kernel).
+    ``support_default_rows`` / ``support_max_rows``
+        the same pair for the support stage, in candidate-grid rows.
     """
 
     tiled_dense: bool = False
     batched_map: bool = False
     default_rows: int = 16
     max_rows: Optional[int] = None
+    tiled_support: bool = False
+    support_default_rows: int = 16
+    support_max_rows: Optional[int] = None
 
     def clamp(self, tile: Optional[TileSpec]) -> Optional[TileSpec]:
         """Fit a requested spec to this capability (None if unsupported)."""
         if tile is None or not self.tiled_dense:
             return None
         if self.max_rows is not None and tile.rows > self.max_rows:
-            return TileSpec(rows=self.max_rows)
+            return dataclasses.replace(tile, rows=self.max_rows)
         return tile
 
+    def clamp_support(self, tile: Optional[TileSpec]) -> Optional[int]:
+        """Effective support block height (grid rows) for a requested spec,
+        or None when the caller asked for no tiling / the backend has no
+        tiled support entry."""
+        if tile is None or not self.tiled_support:
+            return None
+        rows = tile.support_block_rows
+        if self.support_max_rows is not None:
+            rows = min(rows, self.support_max_rows)
+        return rows
+
     def default_tile(self) -> Optional[TileSpec]:
-        return TileSpec(rows=self.default_rows) if self.tiled_dense else None
+        if not self.tiled_dense:
+            return None
+        return TileSpec(
+            rows=self.default_rows,
+            support_rows=self.support_default_rows if self.tiled_support else None,
+        )

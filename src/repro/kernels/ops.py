@@ -2,8 +2,9 @@
 
 ``backend`` names an entry in the kernel registry (:mod:`repro.kernels.registry`):
 
-  * ``"ref"``     -- the pure-jnp oracle math (default on CPU: identical
-                     semantics, fast under XLA:CPU).
+  * ``"ref"``     -- pure-jnp math, streaming-scan formulation (default on
+                     CPU: bitwise identical to the materialised oracles in
+                     :mod:`repro.kernels.ref`, fast under XLA:CPU).
   * ``"pallas"``  -- the Pallas kernels with ``interpret=True`` (kernel
                      bodies execute in Python on CPU -- correctness mode).
   * ``"pallas_tpu"`` -- the Pallas kernels compiled for TPU.
@@ -14,11 +15,15 @@ stays a jit-static string; the wrapper resolves it to a
 :class:`~repro.kernels.registry.KernelBackend` at trace time and dispatches
 through the registry rather than an if/elif ladder per op.
 
-Dense matching additionally accepts a
-:class:`~repro.core.tiling.TileSpec`: each backend declares its tiling
-capability in the registry, and the wrapper routes to the backend's
-row-tiled dense entry point (bitwise identical to the untiled path) when
-the caller asks for tiling and the backend supports it.
+Dense matching and the support search additionally accept a
+:class:`~repro.core.tiling.TileSpec`: each backend declares its per-stage
+tiling capability in the registry, and the wrappers route to the backend's
+row-tiled entry points (bitwise identical to the untiled paths) when the
+caller asks for tiling and the backend supports it.  Both untiled "ref"
+search ops are the STREAMING scan formulations -- the materialised
+oracles stay in :mod:`repro.kernels.ref` as the ground truth the
+streaming paths are pinned against, so no registered backend materialises
+a ``(rows, D, W)`` volume anywhere.
 """
 from __future__ import annotations
 
@@ -69,15 +74,26 @@ def _dense_tiled_ref(*args, **kwargs):
     return dense_match_tiled_xla(*args, **kwargs)
 
 
+def _support_tiled_ref(*args, **kwargs):
+    """Row-block-tiled XLA fallback (late import: core builds on kernels)."""
+    from repro.core.support import support_match_tiled_xla
+
+    return support_match_tiled_xla(*args, **kwargs)
+
+
 register_backend(KernelBackend(
     name="ref",
     sobel=_sobel_ref,
-    support_match=ref.support_match_rows_ref,
-    dense_match=ref.dense_match_rows_ref,
+    support_match=ref.support_match_rows_streaming,
+    dense_match=ref.dense_match_rows_streaming,
     median3x3=_median3x3_ref,
     dense_match_tiled=_dense_tiled_ref,
-    tiling=TileCapability(tiled_dense=True, batched_map=True, default_rows=32),
-    description="pure-jnp oracle math (XLA:CPU friendly)",
+    support_match_tiled=_support_tiled_ref,
+    tiling=TileCapability(
+        tiled_dense=True, batched_map=True, default_rows=32,
+        tiled_support=True, support_default_rows=8,
+    ),
+    description="pure-jnp streaming-scan math (XLA:CPU friendly)",
 ))
 
 
@@ -88,6 +104,11 @@ def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBacke
             *args, block_rows=tile_rows, interpret=interpret, **kwargs
         )
 
+    def support_tiled(*args, tile_rows: int, **kwargs):
+        return support_match_pallas(
+            *args, block_rows=tile_rows, interpret=interpret, **kwargs
+        )
+
     return KernelBackend(
         name=name,
         sobel=functools.partial(sobel_pallas, interpret=interpret),
@@ -95,7 +116,11 @@ def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBacke
         dense_match=functools.partial(dense_match_pallas, interpret=interpret),
         median3x3=functools.partial(median3x3_pallas, interpret=interpret),
         dense_match_tiled=dense_tiled,
-        tiling=TileCapability(tiled_dense=True, default_rows=4, max_rows=64),
+        support_match_tiled=support_tiled,
+        tiling=TileCapability(
+            tiled_dense=True, default_rows=4, max_rows=64,
+            tiled_support=True, support_default_rows=4, support_max_rows=64,
+        ),
         description=description,
     )
 
@@ -116,16 +141,23 @@ def sobel(image: jax.Array, backend: Backend = "ref") -> tuple[jax.Array, jax.Ar
     return get_backend(backend).sobel(image)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend"))
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def support_match(
     desc_l_rows: jax.Array,
     desc_r_rows: jax.Array,
     p: ElasParams,
     backend: Backend = "ref",
+    tile: Optional[TileSpec] = None,
 ) -> jax.Array:
-    return get_backend(backend).support_match(
-        desc_l_rows,
-        desc_r_rows,
+    """Support search over candidate descriptor rows.
+
+    With ``tile`` set, dispatches to the backend's declared row-block-tiled
+    support entry point (clamped to the backend's capability); backends
+    without tiled support run their untiled path -- the output is bitwise
+    identical either way.
+    """
+    be = get_backend(backend)
+    kwargs = dict(
         num_disp=p.num_disp,
         step=p.candidate_step,
         offset=p.candidate_step // 2,
@@ -134,6 +166,12 @@ def support_match(
         lr_threshold=p.lr_threshold,
         disp_min=p.disp_min,
     )
+    rows = be.tiling.clamp_support(tile)
+    if rows is not None:
+        return be.support_match_tiled(
+            desc_l_rows, desc_r_rows, tile_rows=rows, **kwargs
+        )
+    return be.support_match(desc_l_rows, desc_r_rows, **kwargs)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))

@@ -13,6 +13,25 @@ computed with *shifted slices only* (no data-dependent gather).  The
 right-view volume is its diagonal, CV_R[d, u] = CV[d, u + d], again pure
 slices.  Scalar per-candidate lookups (the L/R cross check) become one-hot
 matmuls -- MXU-friendly, gather-free.
+
+Two formulations of the disparity search live side by side:
+
+* the MATERIALISED oracle (:func:`cost_volume_rows` + :func:`_best_two` /
+  ``argmin``) stacks the full ``(bh, D, W)`` volume and reduces it -- the
+  semantic ground truth every other path is pinned against;
+* the STREAMING scan (:func:`support_match_rows_streaming`,
+  :func:`dense_match_rows_streaming`) is a single ``lax.scan`` over ``d``
+  carrying running-best registers per column, so the live working set is
+  O(W) per row block, the jaxpr is O(1) in D, and -- because each scan
+  step computes the exact same integer cost row the volume would hold at
+  slot ``d`` -- the result is *bitwise identical* to the oracle.
+
+The diagonal-in-one-pass trick: at scan step ``d`` the freshly computed
+left-view cost row ``CV[d, :]`` *is* the right-view row up to a shift,
+``CV_R[d, u] = CV[d, u + d]``, so one pass updates the left registers at
+the candidate columns and the right registers everywhere -- both views
+stream from one sweep of the disparity axis, exactly the regular dataflow
+the iELAS paper keeps on-chip.
 """
 from __future__ import annotations
 
@@ -59,11 +78,11 @@ def cost_volume_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int) -> jax
     dl = desc_l.astype(jnp.int32)
     dr = desc_r.astype(jnp.int32)
     dr_pad = jnp.pad(dr, ((0, 0), (num_disp, 0), (0, 0)))        # left-pad by D
+    u = jnp.arange(w)[None, :]                                   # loop-invariant
     cvs = []
     for d in range(num_disp):
         shifted = jax.lax.dynamic_slice_in_dim(dr_pad, num_disp - d, w, axis=1)
         sad = jnp.sum(jnp.abs(dl - shifted), axis=-1)            # (bh, W)
-        u = jnp.arange(w)[None, :]
         cvs.append(jnp.where(u - d >= 0, sad, BIG))
     return jnp.stack(cvs, axis=1)                                # (bh, D, W)
 
@@ -104,13 +123,110 @@ def _texture_rows(desc: jax.Array) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
-# support_match kernel oracle
+# streaming disparity scan: running-best registers over d
 # --------------------------------------------------------------------------
-def support_match_rows_ref(
-    desc_l: jax.Array,          # (bh, W, 16) int8 -- candidate rows of left image
-    desc_r: jax.Array,          # (bh, W, 16) int8
+# Why FOUR registers reproduce _best_two exactly: min2 is the minimum over
+# disparities outside the +-1 exclusion zone of the argmin, and that zone
+# holds at most 3 entries.  So among the 4 smallest costs (kept sorted by
+# value, ties kept at the smallest d because insertion uses strict <) at
+# least one lies outside the zone, and the smallest kept cost outside the
+# zone equals the true excluded second minimum -- any entry smaller than it
+# must sit inside the zone and there are at most 3 of those, so it is never
+# pushed out of the window.  Strict-< insertion also makes register 0 the
+# FIRST d attaining the minimum, matching ``argmin``'s tie-to-smallest-d.
+
+def _insert4(vals: jax.Array, idxs: jax.Array, v: jax.Array, d) -> tuple[jax.Array, jax.Array]:
+    """Insert cost ``v`` at disparity ``d`` into sorted 4-deep registers.
+
+    vals/idxs: (4, ...) with vals sorted ascending; returns the updated
+    pair.  Ties keep the earlier (smaller) disparity.
+    """
+    v1, v2, v3, v4 = vals[0], vals[1], vals[2], vals[3]
+    i1, i2, i3, i4 = idxs[0], idxs[1], idxs[2], idxs[3]
+    d = jnp.full_like(i1, d)
+    b1, b2, b3, b4 = v < v1, v < v2, v < v3, v < v4
+    n_v1 = jnp.where(b1, v, v1)
+    n_i1 = jnp.where(b1, d, i1)
+    n_v2 = jnp.where(b1, v1, jnp.where(b2, v, v2))
+    n_i2 = jnp.where(b1, i1, jnp.where(b2, d, i2))
+    n_v3 = jnp.where(b2, v2, jnp.where(b3, v, v3))
+    n_i3 = jnp.where(b2, i2, jnp.where(b3, d, i3))
+    n_v4 = jnp.where(b3, v3, jnp.where(b4, v, v4))
+    n_i4 = jnp.where(b3, i3, jnp.where(b4, d, i4))
+    return jnp.stack([n_v1, n_v2, n_v3, n_v4]), jnp.stack([n_i1, n_i2, n_i3, n_i4])
+
+
+def _init4(shape: tuple) -> tuple[jax.Array, jax.Array]:
+    """BIG-valued, index-0 registers: matches argmin==0 on all-BIG columns."""
+    return (jnp.full((4, *shape), BIG, jnp.int32),
+            jnp.zeros((4, *shape), jnp.int32))
+
+
+def _finalize4(vals: jax.Array, idxs: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(best, min1, min2) from 4-deep registers; min2 excludes |d - best| <= 1."""
+    best, min1 = idxs[0], vals[0]
+    min2 = jnp.full_like(min1, BIG)
+    for k in (1, 2, 3):
+        min2 = jnp.minimum(min2, jnp.where(jnp.abs(idxs[k] - best) > 1, vals[k], BIG))
+    return best, min1, min2
+
+
+def streaming_best_two(cost: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scan formulation of :func:`_best_two` over an explicit int32 volume.
+
+    cost: (..., D, N) -> (best, min1, min2) each (..., N), bitwise equal to
+    :func:`_best_two`.  Exists to pin the register semantics (tie-breaks,
+    the +-1 exclusion) against the oracle on crafted volumes; the
+    production paths stream the cost rows instead of materialising them.
+    """
+    nd = cost.shape[-2]
+    rows = jnp.moveaxis(cost, -2, 0)                             # (D, ..., N)
+
+    def step(carry, xs):
+        d, row = xs
+        return _insert4(*carry, row, d), None
+
+    init = _init4(rows.shape[1:])
+    (vals, idxs), _ = jax.lax.scan(step, init, (jnp.arange(nd), rows))
+    return _finalize4(vals, idxs)
+
+
+def _scan_cost_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int):
+    """Shared setup for the streaming scans: a function computing the
+    (bh, W) int32 cost row at traced disparity ``d`` -- elementwise
+    identical to slot ``d`` of :func:`cost_volume_rows` -- plus its
+    right-view diagonal shift ``CV_R[d, u] = CV[d, u + d]``."""
+    w = desc_l.shape[1]
+    dl = desc_l.astype(jnp.int32)
+    dr = desc_r.astype(jnp.int32)
+    dr_pad = jnp.pad(dr, ((0, 0), (num_disp, 0), (0, 0)))        # left-pad by D
+    u = jnp.arange(w)[None, :]
+
+    def cost_row(d: jax.Array) -> jax.Array:
+        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, num_disp - d, w, axis=1)
+        sad = jnp.sum(jnp.abs(dl - shifted), axis=-1)            # (bh, W)
+        return jnp.where(u - d >= 0, sad, BIG)
+
+    def diag_row(cost: jax.Array, d: jax.Array) -> jax.Array:
+        padded = jnp.pad(cost, ((0, 0), (0, num_disp)), constant_values=BIG)
+        return jax.lax.dynamic_slice_in_dim(padded, d, w, axis=1)
+
+    return cost_row, diag_row
+
+
+# --------------------------------------------------------------------------
+# support_match kernel oracle (+ the streaming formulation)
+# --------------------------------------------------------------------------
+def _support_decision(
+    best_l: jax.Array,          # (bh, GW) int32 -- left argmin at candidates
+    min1_l: jax.Array,
+    min2_l: jax.Array,
+    best_r: jax.Array,          # (bh, W) int32 -- right argmin everywhere
+    min1_r: jax.Array,
+    min2_r: jax.Array,
+    desc_l: jax.Array,          # (bh, W, 16) int8
+    desc_r: jax.Array,
     *,
-    num_disp: int,
     step: int,
     offset: int,
     support_texture: int,
@@ -118,21 +234,12 @@ def support_match_rows_ref(
     lr_threshold: int,
     disp_min: int,
 ) -> jax.Array:
-    """Support disparity for the candidate columns of a row block.
-
-    Returns (bh, GW) float32 grid rows: disparity or INVALID.
-    All lookups are strided/diagonal slices + one one-hot matmul.
-    """
+    """Texture / uniqueness / L-R tests shared by the materialised oracle
+    and the streaming scan -- both feed it the same (best, min1, min2)
+    registers, so the two paths are bitwise identical by construction."""
     bh, w, _ = desc_l.shape
-    gw = w // step
-    cv = cost_volume_rows(desc_l, desc_r, num_disp)              # (bh, D, W)
-
-    # -- left->right at candidate columns (strided slice of the volume) ----
+    gw = best_l.shape[-1]
     us = jnp.arange(gw) * step + offset                          # (GW,)
-    cv_cand = jax.lax.slice_in_dim(
-        cv, offset, offset + (gw - 1) * step + 1, stride=step, axis=2
-    )                                                            # (bh, D, GW)
-    best_l, min1_l, min2_l = _best_two(cv_cand)
     tex_l = _texture_rows(desc_l)[:, us]
     ok_l = (
         (min1_l.astype(jnp.float32) < support_ratio * min2_l.astype(jnp.float32))
@@ -140,9 +247,6 @@ def support_match_rows_ref(
         & (min1_l < BIG)
     )
 
-    # -- right->left over ALL columns via the diagonal volume ---------------
-    cv_r = diagonal_volume(cv)                                   # (bh, D, W)
-    best_r, min1_r, min2_r = _best_two(cv_r)                     # (bh, W)
     tex_r = _texture_rows(desc_r)
     ok_r = (
         (min1_r.astype(jnp.float32) < support_ratio * min2_r.astype(jnp.float32))
@@ -160,6 +264,94 @@ def support_match_rows_ref(
     margin_ok = us >= (disp_min + 2)
     valid = ok_l & ok_r_at & consistent & margin_ok[None, :]
     return jnp.where(valid, best_l.astype(jnp.float32), INVALID)
+
+
+def support_match_rows_ref(
+    desc_l: jax.Array,          # (bh, W, 16) int8 -- candidate rows of left image
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    *,
+    num_disp: int,
+    step: int,
+    offset: int,
+    support_texture: int,
+    support_ratio: float,
+    lr_threshold: int,
+    disp_min: int,
+) -> jax.Array:
+    """Support disparity for the candidate columns of a row block.
+
+    Returns (bh, GW) float32 grid rows: disparity or INVALID.  This is the
+    MATERIALISED oracle: it stacks the full (bh, D, W) volume and reduces
+    it with argmin -- the ground truth the streaming scan is pinned
+    against.  All lookups are strided/diagonal slices + one one-hot matmul.
+    """
+    bh, w, _ = desc_l.shape
+    gw = w // step
+    cv = cost_volume_rows(desc_l, desc_r, num_disp)              # (bh, D, W)
+
+    # -- left->right at candidate columns (strided slice of the volume) ----
+    cv_cand = jax.lax.slice_in_dim(
+        cv, offset, offset + (gw - 1) * step + 1, stride=step, axis=2
+    )                                                            # (bh, D, GW)
+    best_l, min1_l, min2_l = _best_two(cv_cand)
+
+    # -- right->left over ALL columns via the diagonal volume ---------------
+    cv_r = diagonal_volume(cv)                                   # (bh, D, W)
+    best_r, min1_r, min2_r = _best_two(cv_r)                     # (bh, W)
+
+    return _support_decision(
+        best_l, min1_l, min2_l, best_r, min1_r, min2_r, desc_l, desc_r,
+        step=step, offset=offset, support_texture=support_texture,
+        support_ratio=support_ratio, lr_threshold=lr_threshold,
+        disp_min=disp_min,
+    )
+
+
+def support_match_rows_streaming(
+    desc_l: jax.Array,          # (bh, W, 16) int8 -- candidate rows of left image
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    *,
+    num_disp: int,
+    step: int,
+    offset: int,
+    support_texture: int,
+    support_ratio: float,
+    lr_threshold: int,
+    disp_min: int,
+) -> jax.Array:
+    """Streaming support search: one ``lax.scan`` over the disparity axis.
+
+    Bitwise identical to :func:`support_match_rows_ref` (pinned by
+    tests/test_support_streaming.py) but the (bh, D, W) volumes never
+    exist: each scan step computes one cost row and folds it into 4-deep
+    running (value, d) registers -- for the left view at the candidate
+    columns and, via the diagonal identity CV_R[d, u] = CV[d, u + d], for
+    the right view at every column in the SAME pass.  Live working set:
+    O(W) per row block; jaxpr size: O(1) in ``num_disp``.
+    """
+    bh, w, _ = desc_l.shape
+    gw = w // step
+    cost_row, diag_row = _scan_cost_rows(desc_l, desc_r, num_disp)
+
+    def step_fn(carry, d):
+        left, right = carry
+        cost = cost_row(d)                                       # (bh, W)
+        cand = jax.lax.slice_in_dim(
+            cost, offset, offset + (gw - 1) * step + 1, stride=step, axis=1
+        )                                                        # (bh, GW)
+        return (_insert4(*left, cand, d), _insert4(*right, diag_row(cost, d), d)), None
+
+    init = (_init4((bh, gw)), _init4((bh, w)))
+    (left, right), _ = jax.lax.scan(step_fn, init, jnp.arange(num_disp))
+    best_l, min1_l, min2_l = _finalize4(*left)
+    best_r, min1_r, min2_r = _finalize4(*right)
+
+    return _support_decision(
+        best_l, min1_l, min2_l, best_r, min1_r, min2_r, desc_l, desc_r,
+        step=step, offset=offset, support_texture=support_texture,
+        support_ratio=support_ratio, lr_threshold=lr_threshold,
+        disp_min=disp_min,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -216,6 +408,66 @@ def dense_match_rows_ref(
     disp_l = one_view(cv, mu_l, cand_l, _texture_rows(desc_l))
     disp_r = one_view(cv_r, mu_r, cand_r, _texture_rows(desc_r))
     return disp_l, disp_r
+
+
+def dense_match_rows_streaming(
+    desc_l: jax.Array,          # (bh, W, 16) int8
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    mu_l: jax.Array,            # (bh, W) float32
+    mu_r: jax.Array,            # (bh, W) float32
+    cand_l: jax.Array,          # (bh, W, C) int32 candidate disparities
+    cand_r: jax.Array,          # (bh, W, C) int32
+    *,
+    num_disp: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming dense matching: one ``lax.scan`` over the disparity axis.
+
+    Bitwise identical to :func:`dense_match_rows_ref` but no (bh, D, W)
+    volume or energy tensor is ever stacked: each step computes one cost
+    row, evaluates the same masked energy expression the materialised path
+    evaluates at slot ``d``, and folds it into running (best energy,
+    best d) registers for both views -- the right view via the diagonal
+    shift of the same row.  Strict-< updates reproduce ``argmin``'s
+    tie-to-smallest-d exactly.  Live working set: O(W) per row block;
+    jaxpr size: O(1) in ``num_disp``.
+    """
+    bh, w, _ = desc_l.shape
+    cost_row, diag_row = _scan_cost_rows(desc_l, desc_r, num_disp)
+
+    def update(state, cost, mu, cands, d):
+        best_e, best_d = state
+        mask = jnp.any(d == cands, axis=-1)                      # (bh, W)
+        diff = d.astype(jnp.float32) - mu
+        prior = -jnp.log(gamma + jnp.exp(-(diff * diff) / (2.0 * sigma * sigma)))
+        e = beta * cost.astype(jnp.float32) + prior
+        e = jnp.where(mask & (cost < BIG), e, BIGF)
+        better = e < best_e
+        return jnp.where(better, e, best_e), jnp.where(better, d, best_d)
+
+    def step_fn(carry, d):
+        left, right = carry
+        cost = cost_row(d)
+        left = update(left, cost, mu_l, cand_l, d)
+        right = update(right, diag_row(cost, d), mu_r, cand_r, d)
+        return (left, right), None
+
+    def init():
+        return (jnp.full((bh, w), BIGF, jnp.float32),
+                jnp.zeros((bh, w), jnp.int32))
+
+    ((emin_l, best_l), (emin_r, best_r)), _ = jax.lax.scan(
+        step_fn, (init(), init()), jnp.arange(num_disp)
+    )
+
+    def finish(emin, best, desc):
+        valid = (emin < BIGF) & (_texture_rows(desc) >= match_texture)
+        return jnp.where(valid, best.astype(jnp.float32), INVALID)
+
+    return finish(emin_l, best_l, desc_l), finish(emin_r, best_r, desc_r)
 
 
 def dense_match_rows_windowed_ref(

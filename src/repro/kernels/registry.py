@@ -37,11 +37,12 @@ class KernelBackend:
     algorithm modules and trivially testable against the others.
 
     Every backend also *declares its tiling capability*: ``tiling`` says
-    whether (and how) the backend can run the dense stage in row tiles,
-    and ``dense_match_tiled`` -- when declared -- is the tiled entry point
-    (same signature as ``dense_match`` plus ``tile_rows=``).  Callers pick
-    the path through :class:`~repro.core.tiling.TileCapability` rather
-    than hard-coding backend names.
+    whether (and how) the backend can run the dense and support stages in
+    row tiles / row blocks, and ``dense_match_tiled`` /
+    ``support_match_tiled`` -- when declared -- are the tiled entry points
+    (same signatures as the untiled ops plus ``tile_rows=``).  Callers
+    pick the path through :class:`~repro.core.tiling.TileCapability`
+    rather than hard-coding backend names.
     """
 
     name: str
@@ -50,6 +51,7 @@ class KernelBackend:
     dense_match: Callable      # (dl, dr, mu_l, mu_r, cand_l, cand_r, **kw)
     median3x3: Callable        # (disp) -> disp
     dense_match_tiled: Optional[Callable] = None   # (..., tile_rows=, **kw)
+    support_match_tiled: Optional[Callable] = None  # (..., tile_rows=, **kw)
     tiling: TileCapability = TileCapability()
     description: str = ""
 
@@ -60,6 +62,11 @@ class KernelBackend:
             raise ValueError(
                 f"backend {self.name!r} declares tiled_dense but provides "
                 f"no dense_match_tiled callable"
+            )
+        if self.tiling.tiled_support and self.support_match_tiled is None:
+            raise ValueError(
+                f"backend {self.name!r} declares tiled_support but provides "
+                f"no support_match_tiled callable"
             )
 
 

@@ -65,7 +65,7 @@ from repro.core.params import ElasParams
 from repro.core.pipeline import (
     ielas_dense_stage_batched,
     ielas_interpolate_stage,
-    ielas_support_stage,
+    ielas_support_stage_batched,
 )
 from repro.core.tiling import TileSpec
 
@@ -141,8 +141,9 @@ class FrameProgramCache:
     assembly (wave batching loses to narrower waves once per-frame
     intermediates outgrow per-core cache, so the best width is
     resolution-dependent).  ``tile`` threads a
-    :class:`~repro.core.tiling.TileSpec` into the dense-stage wave
-    program (bitwise identical; a memory-locality decision).
+    :class:`~repro.core.tiling.TileSpec` into BOTH wave programs: the
+    dense stage's row tiles and the support stage's row-block streaming
+    scan (bitwise identical; a memory-locality decision).
     """
 
     def __init__(self, params: ElasParams, batch: int, backend: str,
@@ -252,9 +253,17 @@ class FrameProgramCache:
     def _build(self, key: tuple, batch: int) -> WavePrograms:
         p, backend, tile = self.params, self.backend, self.tile
 
-        def support_one(left, right):
-            dl, dr, sup = ielas_support_stage(left, right, p, backend=backend)
-            return dl, dr, ielas_interpolate_stage(sup, p)
+        def support_wave(left, right):
+            # The wave-shaped support stage: with a tile, the streaming
+            # disparity scan walks the flat batch x row-block grid (one
+            # O(W)-register block live at a time) at the calibrated wave
+            # width, mirroring the dense stage's tiled path.
+            dl, dr, sup = ielas_support_stage_batched(
+                left, right, p, backend=backend, tile=tile
+            )
+            return dl, dr, jax.vmap(
+                lambda s: ielas_interpolate_stage(s, p)
+            )(sup)
 
         def dense_wave(dl, dr, sup):
             return ielas_dense_stage_batched(
@@ -264,7 +273,7 @@ class FrameProgramCache:
         return WavePrograms(
             key=key,
             batch=batch,
-            support=jax.jit(jax.vmap(support_one)),
+            support=jax.jit(support_wave),
             dense=jax.jit(dense_wave),
         )
 
@@ -319,8 +328,9 @@ class StereoService:
     depth:       bound of each inter-stage queue (2 == ping-pong).
     backend:     kernel registry name ("ref" | "pallas" | "pallas_tpu").
     bucket:      resolution bucketing multiple (1 == exact shapes only).
-    tile:        TileSpec for the dense-stage wave program (None = untiled;
-                 tiling is bitwise identical, purely a locality decision).
+    tile:        TileSpec for the support- and dense-stage wave programs
+                 (None = untiled; tiling is bitwise identical, purely a
+                 locality decision).
     autobatch:   benchmark candidate wave widths per resolution bucket at
                  warmup() time and use the per-frame-fastest width for that
                  bucket's waves (``batch`` remains the upper bound).
