@@ -62,6 +62,9 @@ def _parse_args(argv: list[str]) -> argparse.Namespace:
     ap.add_argument("--width", type=int, default=None)
     ap.add_argument("--frames", type=int, default=None,
                     help="frame budget per measured path")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend name; default: device-aware probe "
+                         "(repro.kernels.registry.default_backend)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write collected rows as JSON to this path")
     ap.add_argument("--check", dest="baseline", default=None,
@@ -87,6 +90,15 @@ def main(argv: list[str] | None = None) -> int:
         print("--height and --width must be given together", file=sys.stderr)
         return 2
 
+    # Resolve the device-aware dispatch once, so the CSV header and the
+    # JSON meta state which backend/tile/gather this run actually used.
+    from repro.kernels.registry import get_backend, resolve_dispatch
+
+    backend, default_tile = resolve_dispatch(args.backend, None)
+    gather = get_backend(backend).tiling.default_gather
+    print(f"# dispatch: backend={backend} default_tile={default_tile} "
+          f"gather={gather}", flush=True)
+
     lines: list[str] = []
     print("name,us_per_call,derived")
     if want("table1"):
@@ -100,7 +112,7 @@ def main(argv: list[str] | None = None) -> int:
         lines += table3_accuracy.run() or []
     if want("table4"):
         from benchmarks import table4_throughput
-        kw = {}
+        kw = {"backend": backend}
         if height:
             kw.update(height=height, width=width)
         if frames:
@@ -123,7 +135,8 @@ def main(argv: list[str] | None = None) -> int:
     records = common.rows_to_records(lines)
     if args.json_path:
         meta = {"smoke": args.smoke, "height": height, "width": width,
-                "frames": frames}
+                "frames": frames, "backend": backend, "gather": gather,
+                "default_tile": repr(default_tile)}
         common.write_json(args.json_path, records, meta=meta)
         print(f"# wrote {len(records)} rows to {args.json_path}", flush=True)
 

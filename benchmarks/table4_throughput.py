@@ -5,6 +5,9 @@ speedup comes from eliminating the host round-trip for triangulation.
 
 Here (CPU backend; relative numbers are the claim), a per-stage breakdown
 mirroring the paper's module timing table:
+  * dispatch      -- which backend / tile / gather formulation actually
+                     ran (device-aware: backend=None resolves via the
+                     kernel registry's default_backend() probe),
   * ielas         -- single jitted program per frame,
   * support_stage -- the row-block-tiled streaming support search (the
                      271.6 ms module of the original design; gated in
@@ -27,6 +30,7 @@ from repro.configs.elas_stereo import SYNTH
 from repro.core import pipeline
 from repro.core.tiling import TileSpec
 from repro.data.stereo import synthetic_stereo_pair
+from repro.kernels.registry import get_backend, resolve_dispatch
 from repro.serving.stereo_service import StereoService
 
 
@@ -51,29 +55,48 @@ def _tpu_projection(h: int, w: int, p) -> float:
 
 
 def run(height: int = 120, width: int = 160, frames: int = 6,
-        tile_rows: int = 32, support_rows: int = 8) -> list[str]:
+        tile_rows: int = 32, support_rows: int = 8,
+        backend: str | None = None) -> list[str]:
     p = SYNTH.params
-    tile = TileSpec(rows=tile_rows, support_rows=support_rows)
+    # Resolve the device-aware dispatch ONCE and report it: the rows below
+    # state which backend / tile / gather formulation actually ran, so a
+    # CI artifact from a TPU runner is distinguishable from a CPU one.
+    backend, default_tile = resolve_dispatch(backend, None)
+    tile = TileSpec(rows=tile_rows, support_rows=support_rows,
+                    gather=get_backend(backend).tiling.default_gather)
     rows = []
+    rows.append(row(
+        "table4/dispatch", 0.0,
+        f"backend={backend} tile_rows={tile.rows} "
+        f"support_rows={tile.support_block_rows} gather={tile.gather} "
+        f"default_tile={default_tile}",
+    ))
     il, ir, gt = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=3)
     il_j = jnp.asarray(il, jnp.float32)
     ir_j = jnp.asarray(ir, jnp.float32)
 
     us_ielas = time_call(
-        lambda a, b: pipeline.ielas_disparity(a, b, p), il_j, ir_j
+        lambda a, b: pipeline.ielas_disparity(a, b, p, backend=backend),
+        il_j, ir_j,
     )
-    rows.append(row("table4/ielas", us_ielas, f"fps={1e6/us_ielas:.1f}"))
+    rows.append(row("table4/ielas", us_ielas,
+                    f"fps={1e6/us_ielas:.1f} backend={backend}"))
 
     # -- per-stage breakdown (support and dense are the CI smoke gates) ------
     us_support = time_call(
-        lambda a, b: pipeline.ielas_support_stage(a, b, p, tile=tile),
+        lambda a, b: pipeline.ielas_support_stage(
+            a, b, p, backend=backend, tile=tile
+        ),
         il_j, ir_j,
     )
     rows.append(row(
         "table4/support_stage", us_support,
-        f"fps={1e6/us_support:.1f} support_rows={tile.support_block_rows}",
+        f"fps={1e6/us_support:.1f} support_rows={tile.support_block_rows} "
+        f"backend={backend}",
     ))
-    dl, dr, sup_sparse = pipeline.ielas_support_stage(il_j, ir_j, p, tile=tile)
+    dl, dr, sup_sparse = pipeline.ielas_support_stage(
+        il_j, ir_j, p, backend=backend, tile=tile
+    )
     us_interp = time_call(
         lambda s: pipeline.ielas_interpolate_stage(s, p), sup_sparse
     )
@@ -81,11 +104,14 @@ def run(height: int = 120, width: int = 160, frames: int = 6,
                     f"fps={1e6/us_interp:.1f}"))
     sup = pipeline.ielas_interpolate_stage(sup_sparse, p)
     us_dense = time_call(
-        lambda a, b, s: pipeline.ielas_dense_stage(a, b, s, p, tile=tile),
+        lambda a, b, s: pipeline.ielas_dense_stage(
+            a, b, s, p, backend=backend, tile=tile
+        ),
         dl, dr, sup,
     )
     rows.append(row("table4/dense_stage", us_dense,
-                    f"fps={1e6/us_dense:.1f} tile_rows={tile.rows}"))
+                    f"fps={1e6/us_dense:.1f} tile_rows={tile.rows} "
+                    f"backend={backend} gather={tile.gather}"))
 
     t_hybrid = wall_seconds(
         lambda: pipeline.elas_baseline_disparity(il_j, ir_j, p),
@@ -94,7 +120,7 @@ def run(height: int = 120, width: int = 160, frames: int = 6,
     rows.append(row("table4/hybrid", t_hybrid * 1e6,
                     f"fps={1.0/t_hybrid:.2f}"))
 
-    svc = StereoService(p, depth=2, tile=tile).start()
+    svc = StereoService(p, depth=2, backend=backend, tile=tile).start()
     # warm the service program before timing the stream
     warm = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=99)[:2]
     svc.submit(-1, *warm)

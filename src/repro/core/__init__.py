@@ -10,6 +10,11 @@ from repro.core.pipeline import (  # noqa: F401
     ielas_interpolate_stage,
     ielas_support_stage,
 )
-from repro.core.tiling import TileCapability, TileSpec  # noqa: F401
+from repro.core.tiling import (  # noqa: F401
+    GATHER_IMPLS,
+    UNTILED,
+    TileCapability,
+    TileSpec,
+)
 from repro.core.interpolation import interpolate_support  # noqa: F401
 from repro.core.support import INVALID, support_from_images  # noqa: F401

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.grid_vector import cell_index
 from repro.core.params import ElasParams
-from repro.core.tiling import TileSpec
+from repro.core.tiling import TileArg
 
 
 def candidate_set(
@@ -63,6 +63,7 @@ def candidate_set(
     jax.jit,
     static_argnames=(
         "num_disp", "beta", "gamma", "sigma", "match_texture", "tile_rows",
+        "gather_impl", "disp_min",
     ),
 )
 def dense_match_tiled_xla(
@@ -79,6 +80,8 @@ def dense_match_tiled_xla(
     sigma: float,
     match_texture: int,
     tile_rows: int = 16,
+    gather_impl: str = "take",
+    disp_min: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Tiled XLA dense matching over the flat batch x row-tile grid.
 
@@ -111,7 +114,8 @@ def dense_match_tiled_xla(
         return _ref.dense_match_rows_windowed_ref(
             tdl, tdr, tml, tmr, tcl, tcr,
             num_disp=num_disp, beta=beta, gamma=gamma, sigma=sigma,
-            match_texture=match_texture,
+            match_texture=match_texture, gather_impl=gather_impl,
+            disp_min=disp_min,
         )
 
     disp_l, disp_r = jax.lax.map(
@@ -136,18 +140,22 @@ def dense_both_views(
     grid_vec_l: jax.Array,     # (CH, CW, K)
     grid_vec_r: jax.Array,     # (CH, CW, K)
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(disp_l, disp_r), each (H, W) float32 with INVALID sentinels.
 
     Both views come from ONE pass over the descriptors -- half the SAD
-    compute of two independent passes.  ``tile`` selects the backend's
-    row-tiled dense path (bitwise identical to untiled; a backend that
-    does not declare tiling support falls back to its untiled entry).
+    compute of two independent passes.  ``backend=None`` / ``tile=None``
+    resolve to the device default and the backend's default tile;
+    ``tile`` selects the backend's row-tiled dense path (bitwise
+    identical to untiled; a backend that does not declare tiling support
+    falls back to its untiled entry).
     """
     from repro.kernels import ops
+    from repro.kernels.registry import resolve_dispatch
 
+    backend, tile = resolve_dispatch(backend, tile)
     cand_l = candidate_set(mu_l, grid_vec_l, p)
     cand_r = candidate_set(mu_r, grid_vec_r, p)
     return ops.dense_match(
@@ -165,20 +173,22 @@ def dense_both_views_batched(
     grid_vec_l: jax.Array,     # (B, CH, CW, K)
     grid_vec_r: jax.Array,     # (B, CH, CW, K)
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Wave-shaped dense matching: (disp_l, disp_r), each (B, H, W).
 
-    With a ``tile`` and a backend whose declared capability includes
+    ``backend`` / ``tile`` resolve as in :func:`dense_both_views`.  With
+    a ``tile`` and a backend whose declared capability includes
     ``batched_map``, the whole wave runs through the flat batch x tile
     ``lax.map`` grid (one tile live at a time); otherwise the per-frame
     path is vmapped, which preserves semantics but materialises per-frame
     intermediates batch-wide.
     """
     from repro.kernels import ops
-    from repro.kernels.registry import get_backend
+    from repro.kernels.registry import get_backend, resolve_dispatch
 
+    backend, tile = resolve_dispatch(backend, tile)
     cands_l = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_l, grid_vec_l)
     cands_r = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_r, grid_vec_r)
 
@@ -189,6 +199,7 @@ def dense_both_views_batched(
             desc_l, desc_r, mu_l, mu_r, cands_l, cands_r,
             num_disp=p.num_disp, beta=p.beta, gamma=p.gamma, sigma=p.sigma,
             match_texture=p.match_texture, tile_rows=eff.rows,
+            gather_impl=eff.gather, disp_min=p.disp_min,
         )
     per_frame = functools.partial(
         ops.dense_match_candidates, p=p, backend=backend, tile=tile
@@ -204,8 +215,8 @@ def dense_disparity(
     grid_vec: jax.Array,
     p: ElasParams,
     direction: int = -1,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     """Single-view compatibility wrapper.
 

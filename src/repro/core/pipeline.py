@@ -35,6 +35,16 @@ wave-shaped forms that walk the flat batch x tile grid one tile at a
 time.  Untiled or not, no stage materialises a ``(rows, D, W)`` cost
 volume: the disparity axis is streamed with running-best registers
 (:mod:`repro.kernels.ref`).
+
+Dispatch is device-aware: every stage accepts ``backend=None`` /
+``tile=None`` and resolves them through
+:func:`repro.kernels.registry.resolve_dispatch` -- the device's default
+backend (``pallas_tpu`` on TPU, ``ref`` elsewhere) and that backend's
+declared default tile (including its Mosaic-ready candidate-gather
+formulation).  Since tiling and the gather formulation are bitwise
+invisible, the resolved defaults change memory locality and lowering
+only, never output; pass :data:`repro.core.tiling.UNTILED` to force the
+untiled path.
 """
 from __future__ import annotations
 
@@ -59,7 +69,8 @@ from repro.core.params import ElasParams
 from repro.core.postprocess import postprocess
 from repro.core.prior import plane_prior, right_view_support
 from repro.core.support import descriptors_and_support, extract_support_grid_batched
-from repro.core.tiling import TileSpec
+from repro.core.tiling import TileArg
+from repro.kernels.registry import resolve_dispatch
 
 
 def _dense_priors(
@@ -81,10 +92,11 @@ def ielas_dense_stage(
     dr: jax.Array,
     support_left: jax.Array,   # complete (interpolated) left-view support grid
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     """Dense disparity for both views + post-processing -> final left map."""
+    backend, tile = resolve_dispatch(backend, tile)
     h, w = dl.shape[:2]
     mu_l, mu_r, gv_l, gv_r = _dense_priors(support_left, h, w, p)
     disp_l, disp_r = dense_both_views(
@@ -99,8 +111,8 @@ def ielas_dense_stage_batched(
     dr: jax.Array,
     support_left: jax.Array,   # (B, GH, GW)
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     """Wave-shaped dense stage: (B, H, W) final left maps.
 
@@ -111,6 +123,7 @@ def ielas_dense_stage_batched(
     instead of materialising batch-wide volumes.  Bitwise identical to
     vmapping :func:`ielas_dense_stage` over the wave.
     """
+    backend, tile = resolve_dispatch(backend, tile)
     h, w = dl.shape[1:3]
     mu_l, mu_r, gv_l, gv_r = jax.vmap(
         lambda s: _dense_priors(s, h, w, p)
@@ -131,10 +144,15 @@ def ielas_disparity(
     img_left: jax.Array,
     img_right: jax.Array,
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
-    """iELAS: fully on-device, single static XLA program. (H, W) float32."""
+    """iELAS: fully on-device, single static XLA program. (H, W) float32.
+
+    ``backend=None`` / ``tile=None`` resolve to the device defaults (see
+    module docstring); the output is identical for every resolution.
+    """
+    backend, tile = resolve_dispatch(backend, tile)
     dl, dr, support = ielas_support_stage(
         img_left, img_right, p, backend=backend, tile=tile
     )
@@ -147,15 +165,17 @@ def ielas_support_stage(
     img_left: jax.Array,
     img_right: jax.Array,
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Front half (descriptors + filtered sparse support); also the baseline's.
 
-    With a ``tile``, the support search runs the backend's row-block-tiled
-    path (``tile.support_block_rows`` candidate-grid rows per block) --
+    ``backend`` / ``tile`` resolve to the device defaults.  With a
+    ``tile``, the support search runs the backend's row-block-tiled path
+    (``tile.support_block_rows`` candidate-grid rows per block) --
     bitwise identical to untiled.
     """
+    backend, tile = resolve_dispatch(backend, tile)
     dl, dr, support = descriptors_and_support(
         img_left, img_right, p, backend=backend, tile=tile
     )
@@ -168,8 +188,8 @@ def ielas_support_stage_batched(
     img_left: jax.Array,       # (B, H, W)
     img_right: jax.Array,
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Wave-shaped support stage: (dl, dr, filtered support) with leading B.
 
@@ -180,6 +200,7 @@ def ielas_support_stage_batched(
     instead of running every frame's scan concurrently.  Bitwise identical
     to vmapping :func:`ielas_support_stage` over the wave.
     """
+    backend, tile = resolve_dispatch(backend, tile)
     dl = jax.vmap(desc_mod.extract)(img_left)
     dr = jax.vmap(desc_mod.extract)(img_right)
     support = extract_support_grid_batched(dl, dr, p, backend=backend, tile=tile)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import descriptor as desc_mod
 from repro.core.params import ElasParams
-from repro.core.tiling import TileSpec
+from repro.core.tiling import TileArg
 
 INVALID = -1.0
 
@@ -114,10 +114,14 @@ def extract_support_grid(
     desc_left: jax.Array,      # (H, W, 16) int8
     desc_right: jax.Array,     # (H, W, 16) int8
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
-    """Dense support grid (GH, GW) float32, INVALID where no confident match."""
+    """Dense support grid (GH, GW) float32, INVALID where no confident match.
+
+    ``backend=None`` / ``tile=None`` resolve to the device default backend
+    and its default tile inside :func:`repro.kernels.ops.support_match`.
+    """
     from repro.kernels import ops   # late import: kernels build on core.params
 
     h, w = desc_left.shape[:2]
@@ -131,19 +135,21 @@ def extract_support_grid_batched(
     desc_left: jax.Array,      # (B, H, W, 16) int8
     desc_right: jax.Array,     # (B, H, W, 16) int8
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     """Wave-shaped support grids (B, GH, GW).
 
-    With a ``tile`` and a backend whose capability includes
-    ``batched_map``, the whole wave runs through the flat batch x
-    row-block ``lax.map`` grid (one block live at a time); otherwise the
-    per-frame path is vmapped.  Bitwise identical either way.
+    ``backend`` / ``tile`` resolve to the device defaults first.  With a
+    ``tile`` and a backend whose capability includes ``batched_map``, the
+    whole wave runs through the flat batch x row-block ``lax.map`` grid
+    (one block live at a time); otherwise the per-frame path is vmapped.
+    Bitwise identical either way.
     """
     from repro.kernels import ops
-    from repro.kernels.registry import get_backend
+    from repro.kernels.registry import get_backend, resolve_dispatch
 
+    backend, tile = resolve_dispatch(backend, tile)
     h, w = desc_left.shape[1:3]
     vs, _ = candidate_coords(h, w, p.candidate_step)
     rows_l = desc_left[:, vs]       # (B, GH, W, 16)
@@ -160,8 +166,8 @@ def descriptors_and_support(
     img_left: jax.Array,
     img_right: jax.Array,
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Descriptors for both views + the (unfiltered) support grid.
 
@@ -179,8 +185,8 @@ def support_from_images(
     img_left: jax.Array,
     img_right: jax.Array,
     p: ElasParams,
-    backend: str = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     return descriptors_and_support(
         img_left, img_right, p, backend=backend, tile=tile

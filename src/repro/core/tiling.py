@@ -12,17 +12,28 @@ memory-locality decision.
 Two small types live here:
 
 * :class:`TileSpec` -- how a caller wants the stages tiled: ``rows`` image
-  rows per dense tile, and optionally ``support_rows`` candidate-grid rows
-  per support block (defaulting to ``rows``).  Frozen and hashable so it
-  can travel through ``jax.jit`` as a static argument alongside
+  rows per dense tile, optionally ``support_rows`` candidate-grid rows
+  per support block (defaulting to ``rows``), and ``gather`` -- which
+  formulation the tiled dense stage uses for its per-pixel candidate
+  lookup (see :data:`GATHER_IMPLS`).  Frozen and hashable so it can
+  travel through ``jax.jit`` as a static argument alongside
   ``ElasParams``.
 * :class:`TileCapability` -- what a kernel backend *declares* it can do
   (see :mod:`repro.kernels.registry`), per stage: ``tiled_dense`` /
-  ``tiled_support`` entry points, preferred and maximum block heights, and
+  ``tiled_support`` entry points, preferred and maximum block heights,
   whether the tiled entries natively walk a flat batch x block grid
-  (``batched_map``).  Callers consult it to pick between the backend's
-  tiled entry point, a batched ``lax.map`` fallback, and the plain
-  untiled path.
+  (``batched_map``), and the gather formulation the backend's compiler
+  prefers (``default_gather``).  Callers consult it to pick between the
+  backend's tiled entry point, a batched ``lax.map`` fallback, and the
+  plain untiled path.
+
+``tile=None`` at the public entry points no longer means "untiled": it
+resolves through :meth:`TileCapability.resolve` to the backend's
+:meth:`TileCapability.default_tile`.  Tiling is bitwise invisible, so the
+resolved default only changes memory locality, never output.  Callers who
+really want the untiled volume-free streaming path pass the explicit
+:data:`UNTILED` sentinel (a plain string, so it stays a valid jit-static
+argument).
 
 This module is dependency-free (stdlib only) so the kernel registry can
 import it without pulling in the rest of the core package.
@@ -30,7 +41,29 @@ import it without pulling in the rest of the core package.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
+
+#: The dense-stage candidate-gather formulations (bitwise identical):
+#:
+#: ``"take"``
+#:     ``jnp.take_along_axis`` along the row axis -- the XLA-native gather;
+#:     fastest on CPU, but a data-dependent gather Mosaic cannot lower.
+#: ``"onehot"``
+#:     the gather as a one-hot matmul over the row axis -- MXU-friendly,
+#:     gather-free; the Mosaic-ready default for the TPU backend.
+#: ``"slice"``
+#:     windowed ``lax.dynamic_slice`` sweep over the disparity axis with a
+#:     compare-and-select per candidate slot -- shifted slices only, the
+#:     same access pattern as the streaming cost-volume scan.
+GATHER_IMPLS = ("take", "onehot", "slice")
+
+#: Explicit "run the untiled path" request, now that ``tile=None`` resolves
+#: to the backend's default tile.  A string so it remains hashable and
+#: jit-static wherever a TileSpec is accepted.
+UNTILED = "untiled"
+
+#: What the public entry points accept for their ``tile`` argument.
+TileArg = Union["TileSpec", None, str]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,10 +76,14 @@ class TileSpec:
     ``rows`` when unset.  Both must be positive; the last tile of an
     extent that is not a multiple of the tile height is padded and cropped
     (a partial tile), so odd sizes need no special handling by callers.
+    ``gather`` picks the dense stage's candidate-gather formulation (one
+    of :data:`GATHER_IMPLS`); all formulations are bitwise identical, so
+    like the tile heights it is purely a lowering/locality decision.
     """
 
     rows: int = 16
     support_rows: Optional[int] = None
+    gather: str = "take"
 
     def __post_init__(self):
         if self.rows < 1:
@@ -54,6 +91,10 @@ class TileSpec:
         if self.support_rows is not None and self.support_rows < 1:
             raise ValueError(
                 f"support tile rows must be >= 1, got {self.support_rows}"
+            )
+        if self.gather not in GATHER_IMPLS:
+            raise ValueError(
+                f"gather must be one of {GATHER_IMPLS}, got {self.gather!r}"
             )
 
     @property
@@ -107,6 +148,10 @@ class TileCapability:
         cap (e.g. a VMEM bound for a compiled kernel).
     ``support_default_rows`` / ``support_max_rows``
         the same pair for the support stage, in candidate-grid rows.
+    ``default_gather``
+        the candidate-gather formulation the backend's compiler prefers
+        (one of :data:`GATHER_IMPLS`); used when a resolved default tile
+        is built and as documentation of what the backend can lower.
     """
 
     tiled_dense: bool = False
@@ -116,20 +161,34 @@ class TileCapability:
     tiled_support: bool = False
     support_default_rows: int = 16
     support_max_rows: Optional[int] = None
+    default_gather: str = "take"
 
-    def clamp(self, tile: Optional[TileSpec]) -> Optional[TileSpec]:
-        """Fit a requested spec to this capability (None if unsupported)."""
-        if tile is None or not self.tiled_dense:
+    def __post_init__(self):
+        if self.default_gather not in GATHER_IMPLS:
+            raise ValueError(
+                f"default_gather must be one of {GATHER_IMPLS}, "
+                f"got {self.default_gather!r}"
+            )
+
+    def clamp(self, tile: TileArg) -> Optional[TileSpec]:
+        """Fit a requested spec to this capability (None if unsupported).
+
+        ``None`` and the :data:`UNTILED` sentinel both mean "no tiling"
+        here: clamp sits at the consumption end of the dispatch chain,
+        after :meth:`resolve` has already made the untiled/tiled choice.
+        """
+        if not isinstance(tile, TileSpec) or not self.tiled_dense:
             return None
         if self.max_rows is not None and tile.rows > self.max_rows:
             return dataclasses.replace(tile, rows=self.max_rows)
         return tile
 
-    def clamp_support(self, tile: Optional[TileSpec]) -> Optional[int]:
+    def clamp_support(self, tile: TileArg) -> Optional[int]:
         """Effective support block height (grid rows) for a requested spec,
-        or None when the caller asked for no tiling / the backend has no
-        tiled support entry."""
-        if tile is None or not self.tiled_support:
+        or None when the caller asked for no tiling (``None`` / the
+        :data:`UNTILED` sentinel) or the backend has no tiled support
+        entry."""
+        if not isinstance(tile, TileSpec) or not self.tiled_support:
             return None
         rows = tile.support_block_rows
         if self.support_max_rows is not None:
@@ -137,9 +196,37 @@ class TileCapability:
         return rows
 
     def default_tile(self) -> Optional[TileSpec]:
+        """The TileSpec this backend prefers (None if it cannot tile)."""
         if not self.tiled_dense:
             return None
         return TileSpec(
             rows=self.default_rows,
             support_rows=self.support_default_rows if self.tiled_support else None,
+            gather=self.default_gather,
         )
+
+    def resolve(self, tile: TileArg) -> Union[TileSpec, str]:
+        """Resolve a caller's ``tile`` argument against this capability.
+
+        ``None`` (the everywhere-default) resolves to
+        :meth:`default_tile` (or :data:`UNTILED` for a backend with no
+        tiled dense entry); the explicit :data:`UNTILED` sentinel and a
+        concrete :class:`TileSpec` pass through unchanged.  The resolved
+        domain therefore never contains ``None``: an explicit untiled
+        request stays :data:`UNTILED` through every nested pipeline
+        layer instead of being mistaken for "unspecified" and re-resolved
+        to the default tile.  Idempotent, so the stages can resolve at
+        every layer without drift; :meth:`clamp` / :meth:`clamp_support`
+        map :data:`UNTILED` to the untiled path at the consumption end.
+        """
+        if tile is None:
+            default = self.default_tile()
+            return default if default is not None else UNTILED
+        if isinstance(tile, str):
+            if tile != UNTILED:
+                raise ValueError(
+                    f"tile must be a TileSpec, None, or {UNTILED!r}; "
+                    f"got {tile!r}"
+                )
+            return UNTILED
+        return tile

@@ -11,7 +11,10 @@ from repro.kernels.ops import dense_match, median3x3, sobel, support_match  # no
 from repro.kernels.registry import (  # noqa: F401
     KernelBackend,
     available_backends,
+    default_backend,
     get_backend,
     register_backend,
+    resolve_backend,
+    resolve_dispatch,
 )
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401

@@ -14,11 +14,21 @@ VMEM working set per program (defaults bh=4, W=640, C=25, K=16):
   gathered descriptors 2 x (4, 640, 25, 16) int8  ~ 2.0 MiB
   SAD / energies       2 x (4, 640, 25) i32+f32   ~ 1.0 MiB
   candidates           2 x (4, 640, 25) int32     ~ 0.5 MiB
-independent of D -- the full (bh, D, W) volume never exists.
+independent of D -- the full (bh, D, W) volume never exists.  The gather
+formulation adds its own term on top: ``take`` none; ``onehot`` one live
+(bh, W, W) int8 one-hot (~1.6 MiB at these defaults -- shrink
+``block_rows`` if a wider frame busts the budget); ``slice`` only the
+O(W) shifted SAD row of the running d-sweep.
 
 The body delegates to :func:`repro.kernels.ref.dense_match_rows_windowed_ref`
-so kernel == oracle by construction; the candidate gather lowers to a
-VMEM ``take_along_axis`` along the row axis.
+so kernel == oracle by construction.  ``gather_impl`` picks how the
+per-pixel candidate descriptors are fetched inside the kernel (see
+:data:`repro.core.tiling.GATHER_IMPLS`): ``"take"`` lowers to a VMEM
+``take_along_axis`` along the row axis (XLA-friendly, but a
+data-dependent gather Mosaic cannot compile), while ``"onehot"`` (one-hot
+matmuls on the MXU) and ``"slice"`` (a windowed ``dynamic_slice`` sweep
+of the disparity axis) are the Mosaic-ready reformulations -- all three
+bitwise identical, pinned by tests/test_golden_frame.py.
 """
 from __future__ import annotations
 
@@ -46,6 +56,8 @@ def _dense_kernel(
     gamma: float,
     sigma: float,
     match_texture: int,
+    gather_impl: str,
+    disp_min: int,
 ):
     disp_l, disp_r = ref.dense_match_rows_windowed_ref(
         desc_l_ref[...],
@@ -59,6 +71,8 @@ def _dense_kernel(
         gamma=gamma,
         sigma=sigma,
         match_texture=match_texture,
+        gather_impl=gather_impl,
+        disp_min=disp_min,
     )
     out_l_ref[...] = disp_l
     out_r_ref[...] = disp_r
@@ -68,7 +82,7 @@ def _dense_kernel(
     jax.jit,
     static_argnames=(
         "num_disp", "beta", "gamma", "sigma", "match_texture",
-        "block_rows", "interpret",
+        "block_rows", "interpret", "gather_impl", "disp_min",
     ),
 )
 def dense_match_pallas(
@@ -86,10 +100,13 @@ def dense_match_pallas(
     match_texture: int,
     block_rows: int = 4,
     interpret: bool = True,
+    gather_impl: str = "take",
+    disp_min: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Row-tiled candidate-window dense matching; ``block_rows`` is the
     tile height (dense matching has no cross-row dependency, so any tile
-    height yields bitwise-identical output)."""
+    height yields bitwise-identical output) and ``gather_impl`` the
+    candidate-gather formulation (any choice is bitwise identical)."""
     h, w, k = desc_l.shape
     c = cand_l.shape[-1]
     bh = min(block_rows, h)
@@ -106,6 +123,8 @@ def dense_match_pallas(
         gamma=gamma,
         sigma=sigma,
         match_texture=match_texture,
+        gather_impl=gather_impl,
+        disp_min=disp_min,
     )
     return pl.pallas_call(
         kernel,

@@ -13,17 +13,25 @@ Core pipeline code calls these wrappers, so switching the whole stereo
 system between oracle and kernel execution is one registry name.  The name
 stays a jit-static string; the wrapper resolves it to a
 :class:`~repro.kernels.registry.KernelBackend` at trace time and dispatches
-through the registry rather than an if/elif ladder per op.
+through the registry rather than an if/elif ladder per op.  Dispatch is
+device-aware: ``backend=None`` resolves through
+:func:`~repro.kernels.registry.default_backend` (``pallas_tpu`` on TPU,
+``ref`` elsewhere) and ``tile=None`` through the resolved backend's
+:meth:`~repro.core.tiling.TileCapability.default_tile`, so no call site
+needs to name a backend or tile shape; the explicit
+:data:`~repro.core.tiling.UNTILED` sentinel opts out of tiling.
 
 Dense matching and the support search additionally accept a
 :class:`~repro.core.tiling.TileSpec`: each backend declares its per-stage
 tiling capability in the registry, and the wrappers route to the backend's
 row-tiled entry points (bitwise identical to the untiled paths) when the
-caller asks for tiling and the backend supports it.  Both untiled "ref"
-search ops are the STREAMING scan formulations -- the materialised
-oracles stay in :mod:`repro.kernels.ref` as the ground truth the
-streaming paths are pinned against, so no registered backend materialises
-a ``(rows, D, W)`` volume anywhere.
+caller asks for tiling and the backend supports it, threading the tile's
+``gather`` formulation (take_along_axis / one-hot matmul / windowed
+dynamic slices -- all bitwise identical) into the dense kernels.  Both
+untiled "ref" search ops are the STREAMING scan formulations -- the
+materialised oracles stay in :mod:`repro.kernels.ref` as the ground truth
+the streaming paths are pinned against, so no registered backend
+materialises a ``(rows, D, W)`` volume anywhere.
 """
 from __future__ import annotations
 
@@ -34,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import ElasParams
-from repro.core.tiling import TileCapability, TileSpec
+from repro.core.tiling import TileArg, TileCapability
 from repro.kernels import ref
 from repro.kernels.dense_match import dense_match_pallas
 from repro.kernels.median import median3x3_pallas
@@ -43,11 +51,13 @@ from repro.kernels.registry import (
     available_backends,
     get_backend,
     register_backend,
+    resolve_backend,
+    resolve_dispatch,
 )
 from repro.kernels.sobel import sobel_pallas
 from repro.kernels.support_match import support_match_pallas
 
-Backend = Literal["ref", "pallas", "pallas_tpu"]
+Backend = Optional[Literal["ref", "pallas", "pallas_tpu"]]
 
 
 # --------------------------------------------------------------- ref backend
@@ -120,6 +130,7 @@ def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBacke
         tiling=TileCapability(
             tiled_dense=True, default_rows=4, max_rows=64,
             tiled_support=True, support_default_rows=4, support_max_rows=64,
+            default_gather="onehot",   # Mosaic lowers matmuls, not gathers
         ),
         description=description,
     )
@@ -137,8 +148,8 @@ register_backend(_pallas_backend(
 
 # -------------------------------------------------------------- public wrappers
 @functools.partial(jax.jit, static_argnames=("backend",))
-def sobel(image: jax.Array, backend: Backend = "ref") -> tuple[jax.Array, jax.Array]:
-    return get_backend(backend).sobel(image)
+def sobel(image: jax.Array, backend: Backend = None) -> tuple[jax.Array, jax.Array]:
+    return get_backend(resolve_backend(backend)).sobel(image)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
@@ -146,16 +157,19 @@ def support_match(
     desc_l_rows: jax.Array,
     desc_r_rows: jax.Array,
     p: ElasParams,
-    backend: Backend = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Backend = None,
+    tile: TileArg = None,
 ) -> jax.Array:
     """Support search over candidate descriptor rows.
 
-    With ``tile`` set, dispatches to the backend's declared row-block-tiled
+    ``backend=None`` resolves to the device default and ``tile=None`` to
+    the resolved backend's default tile (``UNTILED`` forces the untiled
+    path).  A tile dispatches to the backend's declared row-block-tiled
     support entry point (clamped to the backend's capability); backends
     without tiled support run their untiled path -- the output is bitwise
     identical either way.
     """
+    backend, tile = resolve_dispatch(backend, tile)
     be = get_backend(backend)
     kwargs = dict(
         num_disp=p.num_disp,
@@ -183,16 +197,18 @@ def dense_match_candidates(
     cand_l: jax.Array,
     cand_r: jax.Array,
     p: ElasParams,
-    backend: Backend = "ref",
-    tile: Optional[TileSpec] = None,
+    backend: Backend = None,
+    tile: TileArg = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Dense matching from pre-built candidate tensors.
 
-    With ``tile`` set, dispatches to the backend's declared row-tiled
-    dense entry point (clamped to the backend's capability); backends
-    without tiling support run their untiled path -- the output is
-    bitwise identical either way.
+    ``backend``/``tile`` resolve as in :func:`support_match`.  A tile
+    dispatches to the backend's declared row-tiled dense entry point
+    (clamped to the backend's capability) with the tile's ``gather``
+    formulation; backends without tiling support run their untiled path
+    -- the output is bitwise identical either way.
     """
+    backend, tile = resolve_dispatch(backend, tile)
     be = get_backend(backend)
     kwargs = dict(
         num_disp=p.num_disp,
@@ -205,7 +221,8 @@ def dense_match_candidates(
     if eff is not None:
         return be.dense_match_tiled(
             desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
-            tile_rows=eff.rows, **kwargs,
+            tile_rows=eff.rows, gather_impl=eff.gather,
+            disp_min=p.disp_min, **kwargs,
         )
     return be.dense_match(desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, **kwargs)
 
@@ -216,5 +233,5 @@ dense_match = dense_match_candidates
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
-def median3x3(disp: jax.Array, backend: Backend = "ref") -> jax.Array:
-    return get_backend(backend).median3x3(disp)
+def median3x3(disp: jax.Array, backend: Backend = None) -> jax.Array:
+    return get_backend(resolve_backend(backend)).median3x3(disp)

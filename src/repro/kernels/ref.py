@@ -38,6 +38,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.tiling import GATHER_IMPLS
+
 # Python literals (NOT jnp arrays): pallas kernel bodies must not capture
 # traced constants, and literals fold into the kernel jaxpr.
 BIG = 1 << 28
@@ -240,7 +242,12 @@ def _support_decision(
     bh, w, _ = desc_l.shape
     gw = best_l.shape[-1]
     us = jnp.arange(gw) * step + offset                          # (GW,)
-    tex_l = _texture_rows(desc_l)[:, us]
+    # Candidate-column texture via a strided slice (Mosaic-friendly), not
+    # an advanced-index gather over the constant column list.
+    tex_l = jax.lax.slice_in_dim(
+        _texture_rows(desc_l), offset, offset + (gw - 1) * step + 1,
+        stride=step, axis=1,
+    )
     ok_l = (
         (min1_l.astype(jnp.float32) < support_ratio * min2_l.astype(jnp.float32))
         & (tex_l >= support_texture)
@@ -470,6 +477,73 @@ def dense_match_rows_streaming(
     return finish(emin_l, best_l, desc_l), finish(emin_r, best_r, desc_r)
 
 
+def _windowed_sad_take(src, dst, idx):
+    """Candidate SAD via ``take_along_axis`` (the XLA-native gather).
+
+    src: (bh, W, K) int32; dst: (bh, W, K) int32; idx: (bh, W, C) int32
+    pre-clipped to [0, W).  Returns (bh, W, C) int32.
+    """
+    gathered = jnp.take_along_axis(                              # (bh, W, C, K)
+        dst[:, :, None, :], idx[..., None], axis=1
+    )
+    return jnp.sum(jnp.abs(src[:, :, None, :] - gathered), axis=-1)
+
+
+def _windowed_sad_onehot(src, dst, idx):
+    """Candidate SAD with the gather as a one-hot matmul over the row axis.
+
+    ``gathered[b, u, k] = sum_v (idx[b, u, c] == v) * dst[b, v, k]`` -- an
+    MXU-shaped (W, W) x (W, K) batched matmul per candidate slot, exact
+    integer math (0/1 one-hot times int values accumulated in int32), so
+    the gathered descriptors (and hence the SAD) are bitwise equal to the
+    ``take`` path.  Mosaic lowers matmuls natively; a data-dependent
+    gather it cannot.  The static Python loop over the C candidate slots
+    keeps the live one-hot at one (bh, W, W) *int8* buffer (~1.6 MiB at
+    bh=4, W=640 -- the dominant term of this formulation's VMEM cost, see
+    :mod:`repro.kernels.dense_match`) instead of (bh, W, C, W); the
+    ``slice`` formulation is the O(W)-memory alternative.
+    """
+    w = dst.shape[1]
+    cols = jnp.arange(w, dtype=jnp.int32)
+    sads = []
+    for c in range(idx.shape[-1]):
+        onehot = (idx[..., c, None] == cols).astype(jnp.int8)    # (bh, W, W)
+        gathered = jnp.einsum(
+            "buv,bvk->buk", onehot, dst, preferred_element_type=jnp.int32
+        )
+        sads.append(jnp.sum(jnp.abs(src - gathered), axis=-1))
+    return jnp.stack(sads, axis=-1)                              # (bh, W, C)
+
+
+def _windowed_sad_slice(src, dst, cands, sign, num_disp, disp_min):
+    """Candidate SAD via a windowed ``dynamic_slice`` sweep of the d axis.
+
+    One ``lax.scan`` step per disparity computes the shifted-slice SAD row
+    (the exact integer row the cost volume would hold at slot d) and
+    selects it into the candidate slots where ``cands == d`` -- shifted
+    slices and compares only, the same regular access pattern as the
+    streaming cost-volume scan, with a jaxpr O(1) in ``num_disp``.
+
+    The sweep covers ``[disp_min, disp_min + num_disp)`` -- exactly the
+    domain ``candidate_set`` clips candidates to -- so every candidate
+    slot receives its true SAD row and the result is bitwise equal to the
+    ``take`` path; out-of-range *columns* (``u -/+ d`` off the image) are
+    masked to BIGF by the caller before any value is read.
+    """
+    w = src.shape[1]
+    reach = num_disp + disp_min       # max |column shift| the sweep performs
+    pad = jnp.pad(dst, ((0, 0), (reach, reach), (0, 0)))
+
+    def step(sad, d):
+        shifted = jax.lax.dynamic_slice_in_dim(pad, reach + sign * d, w, axis=1)
+        row = jnp.sum(jnp.abs(src - shifted), axis=-1)           # (bh, W)
+        return jnp.where(cands == d, row[..., None], sad), None
+
+    init = jnp.zeros(cands.shape, jnp.int32)
+    sad, _ = jax.lax.scan(step, init, jnp.arange(num_disp) + disp_min)
+    return sad
+
+
 def dense_match_rows_windowed_ref(
     desc_l: jax.Array,          # (bh, W, 16) int8
     desc_r: jax.Array,          # (bh, W, 16) int8
@@ -483,6 +557,8 @@ def dense_match_rows_windowed_ref(
     gamma: float,
     sigma: float,
     match_texture: int,
+    gather_impl: str = "take",
+    disp_min: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Candidate-window dense matching for a row block.
 
@@ -492,12 +568,27 @@ def dense_match_rows_windowed_ref(
     candidate disparities: an O(C) window per pixel instead of O(D), with
     a (bh, W, C) working set that stays cache/VMEM-resident per row tile.
 
+    ``gather_impl`` picks how the per-pixel candidate descriptors are
+    fetched (see :data:`repro.core.tiling.GATHER_IMPLS`): ``"take"`` is
+    the XLA gather, ``"onehot"`` the MXU one-hot matmul, ``"slice"`` the
+    windowed dynamic-slice sweep -- the latter two are the Mosaic-ready
+    reformulations (no data-dependent gather anywhere).  All three are
+    bitwise identical: in-range candidate SADs are the same integers,
+    out-of-range slots are masked to BIGF before use, and the float energy
+    expression is shared.  ``disp_min`` anchors the ``slice`` sweep to the
+    candidate value domain ``[disp_min, disp_min + num_disp)`` (what
+    ``candidate_set`` clips to); the other formulations ignore it.
+
     Bitwise identical to :func:`dense_match_rows_ref`: the energy at a
     candidate d is computed by the same float expression the full volume
     uses at slot d, the min over the candidate window equals the min over
     the masked D axis (duplicates cannot change a min), and ties resolve
     to the smallest disparity exactly as ``argmin`` over D does.
     """
+    if gather_impl not in GATHER_IMPLS:
+        raise ValueError(
+            f"unknown gather_impl {gather_impl!r}; expected one of {GATHER_IMPLS}"
+        )
     bh, w, k = desc_l.shape
     dl = desc_l.astype(jnp.int32)
     dr = desc_r.astype(jnp.int32)
@@ -507,11 +598,14 @@ def dense_match_rows_windowed_ref(
         # matching column in the other view: u - d (left), u + d (right)
         uc = u + sign * cands                                    # (bh, W, C)
         in_range = (uc >= 0) & (uc < w)
-        idx = jnp.clip(uc, 0, w - 1)
-        gathered = jnp.take_along_axis(                          # (bh, W, C, K)
-            dst[:, :, None, :], idx[..., None], axis=1
-        )
-        sad = jnp.sum(jnp.abs(src[:, :, None, :] - gathered), axis=-1)
+        if gather_impl == "slice":
+            sad = _windowed_sad_slice(src, dst, cands, sign, num_disp, disp_min)
+        else:
+            idx = jnp.clip(uc, 0, w - 1)
+            if gather_impl == "onehot":
+                sad = _windowed_sad_onehot(src, dst, idx)
+            else:
+                sad = _windowed_sad_take(src, dst, idx)
         diff = cands.astype(jnp.float32) - mu[..., None]
         prior = -jnp.log(gamma + jnp.exp(-(diff * diff) / (2.0 * sigma * sigma)))
         e = beta * sad.astype(jnp.float32) + prior

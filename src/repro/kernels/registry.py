@@ -16,16 +16,25 @@ engine picks it up with no further edits.
 
 Built-in backends (registered by :mod:`repro.kernels.ops` on import):
 
-* ``ref``         -- pure-jnp oracle math (default on CPU).
+* ``ref``         -- pure-jnp oracle math (default on CPU/GPU).
 * ``pallas``      -- Pallas kernels in interpret mode (correctness on CPU).
-* ``pallas_tpu``  -- Pallas kernels compiled for TPU.
+* ``pallas_tpu``  -- Pallas kernels compiled for TPU (default on TPU).
+
+Dispatch is *device-aware*: call sites that pass ``backend=None`` resolve
+it through :func:`default_backend`, which probes ``jax.default_backend()``
+and picks the registered backend that compiles natively for the platform;
+:func:`resolve_dispatch` additionally resolves a ``tile=None`` request to
+the chosen backend's :meth:`~repro.core.tiling.TileCapability.default_tile`
+so the tiled, Mosaic-ready kernel paths are the default everywhere without
+any call site hard-coding a backend or tile shape.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, Optional, Tuple
 
-from repro.core.tiling import TileCapability
+from repro.core.tiling import TileArg, TileCapability, TileSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,3 +105,61 @@ def get_backend(name: str) -> KernelBackend:
 
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def default_backend() -> str:
+    """The kernel backend for the current device, by platform probe.
+
+    Resolution order:
+
+    1. The ``IELAS_BACKEND`` environment variable, when set to a
+       registered name -- the operational escape hatch (e.g. force
+       ``pallas`` to run the kernel bodies in interpret mode on CPU, or
+       pin ``ref`` on a TPU host while debugging a Mosaic lowering).
+    2. ``jax.default_backend() == "tpu"`` -> ``pallas_tpu``: the Pallas
+       kernels compiled by Mosaic, with the one-hot-matmul candidate
+       gather their capability declares as ``default_gather``.
+    3. Anything else (``cpu``, ``gpu``) -> ``ref``: the pure-jnp
+       streaming-scan formulation, which XLA compiles natively everywhere
+       (interpret-mode Pallas is a correctness harness, never a
+       performance default).
+
+    Call sites pass ``backend=None`` and let :func:`resolve_dispatch`
+    apply this probe exactly once per entry; the resolved *name* is what
+    crosses jit boundaries, so device-aware dispatch adds no trace-time
+    work.
+    """
+    forced = os.environ.get("IELAS_BACKEND")
+    if forced:
+        if forced not in _REGISTRY:
+            raise KeyError(
+                f"IELAS_BACKEND={forced!r} is not a registered backend; "
+                f"available: {available_backends()}"
+            )
+        return forced
+    import jax  # deferred: keep the registry importable without a device
+
+    if jax.default_backend() == "tpu" and "pallas_tpu" in _REGISTRY:
+        return "pallas_tpu"
+    return "ref"
+
+
+def resolve_backend(name: Optional[str]) -> str:
+    """A concrete backend name: ``name`` itself, or the device default."""
+    return name if name is not None else default_backend()
+
+
+def resolve_dispatch(backend: Optional[str], tile: TileArg) -> Tuple[str, TileArg]:
+    """Resolve a call site's ``(backend, tile)`` pair to concrete values.
+
+    ``backend=None`` becomes :func:`default_backend`; ``tile=None``
+    becomes the resolved backend's
+    :meth:`~repro.core.tiling.TileCapability.default_tile`.  The explicit
+    :data:`~repro.core.tiling.UNTILED` sentinel passes through AS the
+    sentinel (never ``None``), so an untiled request survives every
+    nested resolution instead of being re-defaulted.  Idempotent:
+    concrete inputs pass through unchanged, so every pipeline layer may
+    resolve defensively.
+    """
+    name = resolve_backend(backend)
+    return name, get_backend(name).tiling.resolve(tile)

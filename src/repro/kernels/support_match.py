@@ -17,6 +17,13 @@ VMEM working set per program (defaults bh=4, W=640, D=64):
   running registers 8 x (4, 640+128) int32   ~ 0.10 MiB
 O(W) -- constant in D; the (bh, D, W) volumes of the materialised oracle
 (~1.3 MiB at these defaults, and growing with D) never exist.
+
+The body is gather-free end to end, so it is Mosaic-ready as-is: cost
+rows and their diagonal shifts are ``dynamic_slice``s, the candidate
+columns come from *strided slices* of the cost row and the texture map
+(not advanced-index gathers), and the L/R cross check is a one-hot
+matmul -- the same "irregular -> regular" treatment the dense kernel's
+``gather_impl`` variants apply to its candidate-window lookup.
 """
 from __future__ import annotations
 

@@ -67,7 +67,8 @@ from repro.core.pipeline import (
     ielas_interpolate_stage,
     ielas_support_stage_batched,
 )
-from repro.core.tiling import TileSpec
+from repro.core.tiling import TileArg, TileSpec
+from repro.kernels.registry import resolve_dispatch
 
 _EOS = object()          # end-of-stream sentinel flowing through the stages
 
@@ -108,6 +109,9 @@ class ServiceStats:
     throughput_fps: float          # completed / (last emit - first submit)
     calibrations: int = 0          # auto-batch calibration passes run
     batch_by_bucket: tuple = ()    # ((H, W), wave width) per calibrated bucket
+    backend: str = ""              # RESOLVED kernel backend the waves run on
+    tile: Optional[TileSpec] = None  # resolved TileSpec; None == untiled
+                                     # (an explicit UNTILED request)
 
 
 # ---------------------------------------------------------------------------
@@ -143,20 +147,25 @@ class FrameProgramCache:
     resolution-dependent).  ``tile`` threads a
     :class:`~repro.core.tiling.TileSpec` into BOTH wave programs: the
     dense stage's row tiles and the support stage's row-block streaming
-    scan (bitwise identical; a memory-locality decision).
+    scan (bitwise identical; a memory-locality decision).  ``backend`` /
+    ``tile`` accept None and resolve to the device defaults once, here,
+    so every program the cache ever builds shares one concrete dispatch.
     """
 
-    def __init__(self, params: ElasParams, batch: int, backend: str,
-                 bucket: int = 1, tile: Optional[TileSpec] = None):
+    def __init__(self, params: ElasParams, batch: int,
+                 backend: Optional[str] = None, bucket: int = 1,
+                 tile: TileArg = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if bucket < 1:
             raise ValueError(f"bucket must be >= 1, got {bucket}")
         self.params = params
         self.batch = batch
-        self.backend = backend
+        # Resolve the device-aware defaults exactly once, at construction:
+        # every wave program is then built from the concrete pair, so the
+        # probe can never introduce a hot-path retrace.
+        self.backend, self.tile = resolve_dispatch(backend, tile)
         self.bucket = bucket
-        self.tile = tile
         self.hits = 0
         self.misses = 0
         self.calibrations = 0
@@ -326,11 +335,16 @@ class StereoService:
     params:      algorithm parameters (jit-static; part of the program key).
     batch:       wave width -- max frames fused into one device program.
     depth:       bound of each inter-stage queue (2 == ping-pong).
-    backend:     kernel registry name ("ref" | "pallas" | "pallas_tpu").
+    backend:     kernel registry name ("ref" | "pallas" | "pallas_tpu"),
+                 or None to probe the device default
+                 (:func:`repro.kernels.registry.default_backend`).
     bucket:      resolution bucketing multiple (1 == exact shapes only).
-    tile:        TileSpec for the support- and dense-stage wave programs
-                 (None = untiled; tiling is bitwise identical, purely a
-                 locality decision).
+    tile:        TileSpec for the support- and dense-stage wave programs;
+                 None resolves to the backend's default tile, the
+                 UNTILED sentinel forces the untiled path (tiling is
+                 bitwise identical, purely a locality decision).  The
+                 resolved choice is exposed as ``service.backend`` /
+                 ``service.tile`` and in :meth:`stats`.
     autobatch:   benchmark candidate wave widths per resolution bucket at
                  warmup() time and use the per-frame-fastest width for that
                  bucket's waves (``batch`` remains the upper bound).
@@ -341,19 +355,21 @@ class StereoService:
     """
 
     def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
-                 backend: str = "ref", bucket: int = 1,
-                 tile: Optional[TileSpec] = None, autobatch: bool = False,
+                 backend: Optional[str] = None, bucket: int = 1,
+                 tile: TileArg = None, autobatch: bool = False,
                  wave_linger: float = 0.002, max_pending: int = 64):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.params = params
         self.batch = batch
         self.depth = depth
-        self.backend = backend
         self.autobatch = autobatch
         self.wave_linger = wave_linger
         self._cache = FrameProgramCache(params, batch, backend, bucket=bucket,
                                         tile=tile)
+        # mirror the cache's resolved dispatch (device-aware defaults)
+        self.backend = self._cache.backend
+        self.tile = self._cache.tile
 
         self._ingest: queue.Queue = queue.Queue(maxsize=max_pending)
         self._waves: queue.Queue = queue.Queue(maxsize=depth)
@@ -609,6 +625,8 @@ class StereoService:
                 throughput_fps=(self._completed / span) if span > 0 else 0.0,
                 calibrations=self._cache.calibrations,
                 batch_by_bucket=self._cache.batch_choices(),
+                backend=self.backend,
+                tile=self.tile if isinstance(self.tile, TileSpec) else None,
             )
 
     # ------------------------------------------------------- stage plumbing

@@ -1,0 +1,116 @@
+"""Accuracy oracle: the regular-mesh prior vs true Delaunay triangulation.
+
+The paper's whole technique replaces the irregular, host-side Delaunay
+triangulation of the sparse support points with interpolation onto a
+fixed regular mesh (Sec. II-B, evaluated in Table I).  These tests
+promote the ``benchmarks/table1_interp_error.py`` comparison into the
+suite as hard bounds:
+
+* on random sparse support grids, the plane prior rasterised from the
+  interpolated regular mesh must agree with
+  :func:`repro.core.triangulation.delaunay_prior` (the original-ELAS
+  oracle) to a Table-I-style mean relative error bound, and
+* end to end, the fully regular ``ielas_disparity`` pipeline must stay
+  within a fixed Eq.-(1) error margin of the hybrid baseline that
+  round-trips to the host for scipy Delaunay.
+
+Skipped (not failed) when scipy is unavailable, like the baseline
+benchmarks themselves.
+"""
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+pytest.importorskip("scipy.spatial")
+
+from repro.configs.elas_stereo import SYNTH            # noqa: E402
+from repro.core import pipeline, triangulation         # noqa: E402
+from repro.core.interpolation import interpolate_support  # noqa: E402
+from repro.core.prior import plane_prior               # noqa: E402
+from repro.data.stereo import synthetic_stereo_pair    # noqa: E402
+
+P = SYNTH.params
+
+# Table-I flavour: the paper reports mean relative disparity errors in the
+# 0.04-0.09 band; the two priors here come from the SAME support points,
+# so they must agree far tighter than that in the mean.  Measured on the
+# seeds below: mean 0.011-0.023, p95 0.023-0.072.
+MEAN_REL_BOUND = 0.10
+P95_REL_BOUND = 0.25
+
+
+def _random_sparse_grid(seed: int, gh: int = 12, gw: int = 16):
+    """A sparsified slanted-plane support grid (smooth + noise), like the
+    filtered support stage would produce."""
+    rng = np.random.default_rng(seed)
+    step = P.candidate_step
+    a = rng.uniform(-0.05, 0.05)
+    b = rng.uniform(-0.05, 0.05)
+    c = rng.uniform(10, 40)
+    uu, vv = np.meshgrid(np.arange(gw) * step, np.arange(gh) * step)
+    d = np.clip(a * uu + b * vv + c + rng.normal(0, 0.5, (gh, gw)), 1, 60)
+    mask = rng.random((gh, gw)) < 0.45
+    return np.where(mask, d, -1.0).astype(np.float32)
+
+
+class TestMeshPriorVsDelaunay:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_regular_mesh_prior_tracks_delaunay(self, seed):
+        grid = _random_sparse_grid(seed)
+        gh, gw = grid.shape
+        h, w = gh * P.candidate_step, gw * P.candidate_step
+
+        mesh = np.asarray(plane_prior(
+            interpolate_support(jnp.asarray(grid), P), h, w, P
+        ))
+        dela = triangulation.delaunay_prior(grid, h, w, P)
+
+        ok = dela > 0
+        assert ok.mean() > 0.5, "oracle prior degenerate; bad test input"
+        rel = np.abs(mesh - dela)[ok] / dela[ok]
+        assert rel.mean() < MEAN_REL_BOUND, (
+            f"regular-mesh prior drifted from the Delaunay oracle: "
+            f"mean rel err {rel.mean():.4f} >= {MEAN_REL_BOUND}"
+        )
+        assert np.percentile(rel, 95) < P95_REL_BOUND
+
+    def test_prior_exact_on_fully_valid_planar_grid(self):
+        """With no vacancies and a perfectly planar field, both the mesh
+        prior and the Delaunay prior rasterise the same plane: the mesh
+        prior must reproduce it to float tolerance inside the hull."""
+        gh, gw = 8, 10
+        step = P.candidate_step
+        uu, vv = np.meshgrid(np.arange(gw) * step + step // 2,
+                             np.arange(gh) * step + step // 2)
+        grid = (0.02 * uu + 0.03 * vv + 12.0).astype(np.float32)
+        h, w = gh * step, gw * step
+        mesh = np.asarray(plane_prior(jnp.asarray(grid), h, w, P))
+        y = np.arange(h)[:, None]
+        x = np.arange(w)[None, :]
+        exact = 0.02 * x + 0.03 * y + 12.0
+        np.testing.assert_allclose(mesh, exact, rtol=0, atol=1e-3)
+
+
+class TestEndToEndTable1:
+    def test_ielas_error_within_margin_of_hybrid_baseline(self):
+        """Eq. (1) disparity error of the fully regular pipeline vs the
+        host-Delaunay hybrid on a deterministic synthetic scene: the
+        regularisation must cost at most a fixed Table-I-style margin
+        (measured drift on these scenes: 0.008-0.026)."""
+        margin = 0.05
+        il, ir, gt = synthetic_stereo_pair(height=60, width=80, d_max=24, seed=3)
+        ilj = jnp.asarray(il, jnp.float32)
+        irj = jnp.asarray(ir, jnp.float32)
+        gtj = jnp.asarray(gt)
+        err_interp = float(pipeline.disparity_error(
+            pipeline.ielas_disparity(ilj, irj, P), gtj
+        ))
+        err_orig = float(pipeline.disparity_error(
+            pipeline.elas_baseline_disparity(ilj, irj, P), gtj
+        ))
+        assert err_interp <= err_orig + margin, (
+            f"regular pipeline err {err_interp:.4f} exceeds hybrid "
+            f"baseline {err_orig:.4f} by more than {margin}"
+        )
+        # both must stay in the sane absolute band for this scene
+        assert err_interp < 0.25 and err_orig < 0.25

@@ -1,0 +1,213 @@
+"""End-to-end golden-frame conformance suite.
+
+One deterministic synthetic stereo scene runs through the full
+``ielas_disparity`` pipeline; the output is pinned by an EXACT sha256
+digest of the float32 array bytes.  The same digest must come out of
+every point of the dispatch lattice:
+
+    backends (ref, pallas[, pallas_tpu on TPU])
+  x tile specs (explicit UNTILED, the resolved device default, and a
+    concrete odd-block TileSpec)
+  x candidate-gather formulations (take / onehot / slice)
+  x unbatched single-frame and batched wave-shaped stage paths
+
+so ANY numeric drift anywhere in the stack -- a kernel edit, a gather
+reformulation, a tiling change, a dispatch-resolution bug, an XLA
+lowering difference -- fails loudly with the name of the exact
+configuration that diverged.  This is the conformance gate behind the
+"bitwise identical" claims in ROADMAP.md.
+
+If the digest legitimately changes (an intentional algorithm change),
+recompute it with the snippet in :data:`GOLDEN_SHA256`'s comment and
+review the diff as carefully as a checked-in binary.
+"""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.elas_stereo import SYNTH
+from repro.core import pipeline
+from repro.core.tiling import GATHER_IMPLS, UNTILED, TileSpec
+from repro.data.stereo import synthetic_stereo_pair
+from repro.kernels.registry import (
+    available_backends,
+    default_backend,
+    get_backend,
+    resolve_dispatch,
+)
+
+P = SYNTH.params
+
+# The canonical scene: odd sizes on purpose (partial last tile in every
+# tiled configuration) and enough disparity range to exercise the full
+# candidate window.
+H, W, D_MAX, SEED = 57, 83, 24, 11
+
+# Recompute after an INTENTIONAL output change with:
+#   PYTHONPATH=src python - <<'PY'
+#   import hashlib, numpy as np, jax.numpy as jnp
+#   from repro.configs.elas_stereo import SYNTH
+#   from repro.core import pipeline
+#   from repro.core.tiling import UNTILED
+#   from repro.data.stereo import synthetic_stereo_pair
+#   il, ir, _ = synthetic_stereo_pair(height=57, width=83, d_max=24, seed=11)
+#   out = np.asarray(pipeline.ielas_disparity(
+#       jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32),
+#       SYNTH.params, tile=UNTILED))
+#   print(hashlib.sha256(np.ascontiguousarray(out).tobytes()).hexdigest())
+#   PY
+GOLDEN_SHA256 = "91e3ce9df8a9d01f9b9905bd2aabe4f0791dd06329e1c6f015557054988c018b"
+
+
+def _digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def scene():
+    il, ir, _ = synthetic_stereo_pair(height=H, width=W, d_max=D_MAX, seed=SEED)
+    return jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32)
+
+
+def _cpu_backends():
+    """Backends that can execute on the current host (pallas_tpu only on TPU)."""
+    names = ["ref", "pallas"]
+    if jax.default_backend() == "tpu":
+        names.append("pallas_tpu")
+    return names
+
+
+def _tile_cases():
+    """(id, tile) pairs covering the dispatch lattice: the explicit
+    untiled path, the resolved device default (``None``), and a concrete
+    odd-block spec in each gather formulation."""
+    cases = [("untiled", UNTILED), ("default", None)]
+    for g in GATHER_IMPLS:
+        cases.append((f"rows16-{g}", TileSpec(rows=16, support_rows=3, gather=g)))
+    return cases
+
+
+def _check(disp, label: str) -> None:
+    out = np.asarray(disp)
+    assert out.shape == (H, W) and out.dtype == np.float32, label
+    got = _digest(out)
+    assert got == GOLDEN_SHA256, (
+        f"golden-frame drift in [{label}]: sha256 {got} != pinned "
+        f"{GOLDEN_SHA256} -- some layer of the stack changed the output"
+    )
+
+
+class TestGoldenFrame:
+    @pytest.mark.parametrize("backend", _cpu_backends())
+    @pytest.mark.parametrize("tile_id,tile", _tile_cases())
+    def test_single_frame(self, scene, backend, tile_id, tile):
+        il, ir = scene
+        disp = pipeline.ielas_disparity(il, ir, P, backend=backend, tile=tile)
+        _check(disp, f"single backend={backend} tile={tile_id}")
+
+    @pytest.mark.parametrize("backend", _cpu_backends())
+    @pytest.mark.parametrize("tile_id,tile", _tile_cases())
+    def test_batched_wave(self, scene, backend, tile_id, tile):
+        """The wave-shaped stage seam (what the serving engine runs) must
+        produce the same golden frame in every batch slot."""
+        il, ir = scene
+        left = jnp.stack([il, il])
+        right = jnp.stack([ir, ir])
+        dl, dr, sup = pipeline.ielas_support_stage_batched(
+            left, right, P, backend=backend, tile=tile
+        )
+        sup = jax.vmap(lambda s: pipeline.ielas_interpolate_stage(s, P))(sup)
+        out = pipeline.ielas_dense_stage_batched(
+            dl, dr, sup, P, backend=backend, tile=tile
+        )
+        for slot in range(out.shape[0]):
+            _check(out[slot],
+                   f"batched[{slot}] backend={backend} tile={tile_id}")
+
+
+class TestGatherImplsAgreeOffsetRange:
+    """The gather formulations must agree for ANY candidate value domain
+    ``[disp_min, disp_min + num_disp)`` -- in particular ``disp_min > 0``,
+    where the slice sweep must cover the offset window, not ``[0, D)``."""
+
+    @pytest.mark.parametrize("disp_min", [0, 3, 8])
+    def test_slice_and_onehot_match_take(self, disp_min):
+        from repro.core import descriptor as desc_mod
+        from repro.kernels import ref as kref
+
+        num_disp = 16
+        bh, w = 3, 64
+        rng = np.random.default_rng(7)
+        tex = rng.integers(0, 256, (bh, w + 8)).astype(np.float32)
+        dl = desc_mod.extract(jnp.asarray(tex[:, 8:]))
+        dr = desc_mod.extract(jnp.asarray(tex[:, :w]))
+        mu = jnp.asarray(rng.uniform(disp_min, disp_min + num_disp - 1,
+                                     (bh, w)).astype(np.float32))
+        cands = jnp.asarray(rng.integers(
+            disp_min, disp_min + num_disp, (bh, w, 5)
+        ).astype(np.int32))
+        kw = dict(num_disp=num_disp, beta=0.02, gamma=3.0, sigma=1.0,
+                  match_texture=1, disp_min=disp_min)
+        want = kref.dense_match_rows_windowed_ref(
+            dl, dr, mu, mu, cands, cands, gather_impl="take", **kw
+        )
+        for impl in ("onehot", "slice"):
+            got = kref.dense_match_rows_windowed_ref(
+                dl, dr, mu, mu, cands, cands, gather_impl=impl, **kw
+            )
+            for view, (g, t) in enumerate(zip(got, want)):
+                np.testing.assert_array_equal(
+                    np.asarray(g), np.asarray(t),
+                    err_msg=f"{impl} view {view} diverged at disp_min={disp_min}",
+                )
+
+
+class TestDispatchResolution:
+    """The device-aware defaults the golden lattice relies on."""
+
+    def test_default_backend_is_registered_and_platform_correct(self):
+        name = default_backend()
+        assert name in available_backends()
+        if jax.default_backend() == "tpu":
+            assert name == "pallas_tpu"
+        else:
+            assert name == "ref"
+
+    def test_env_override_wins_and_rejects_unknown(self, monkeypatch):
+        monkeypatch.setenv("IELAS_BACKEND", "pallas")
+        assert default_backend() == "pallas"
+        monkeypatch.setenv("IELAS_BACKEND", "no-such-backend")
+        with pytest.raises(KeyError, match="IELAS_BACKEND"):
+            default_backend()
+
+    def test_tile_none_resolves_to_backend_default(self):
+        be, tile = resolve_dispatch(None, None)
+        assert tile == get_backend(be).tiling.default_tile()
+        assert tile is not None, "default backends must declare a tile"
+
+    def test_untiled_sentinel_is_sticky_and_passthrough(self):
+        """UNTILED must survive resolution (never collapse to None, which
+        inner layers would re-resolve to the default tile) and only turn
+        into 'no tiling' at the clamp/consumption end."""
+        be, tile = resolve_dispatch("ref", UNTILED)
+        assert be == "ref" and tile == UNTILED
+        assert resolve_dispatch(be, tile) == (be, tile), "idempotent"
+        assert get_backend("ref").tiling.clamp(UNTILED) is None
+        assert get_backend("ref").tiling.clamp_support(UNTILED) is None
+        spec = TileSpec(rows=7, gather="slice")
+        assert resolve_dispatch("pallas", spec) == ("pallas", spec)
+        with pytest.raises(ValueError, match="UNTILED|untiled"):
+            resolve_dispatch("ref", "bogus")
+
+    def test_pallas_default_gather_is_mosaic_ready(self):
+        for name in ("pallas", "pallas_tpu"):
+            cap = get_backend(name).tiling
+            assert cap.default_gather == "onehot"
+            assert cap.default_tile().gather == "onehot"
+
+    def test_tilespec_rejects_unknown_gather(self):
+        with pytest.raises(ValueError, match="gather"):
+            TileSpec(rows=4, gather="scatter")

@@ -112,6 +112,88 @@ class TestFig2Example:
         assert out[1, 1] == pytest.approx(0.0)    # no pair anywhere -> C
 
 
+class TestEdgeCases:
+    """Deterministic edge behaviour the property tests can't pin exactly."""
+
+    @pytest.mark.parametrize("border_extend", [True, False])
+    @pytest.mark.parametrize(
+        "shape", [(1, 1), (1, 9), (9, 1), (3, 3), (7, 12)]
+    )
+    def test_output_never_invalid(self, shape, border_extend):
+        """Any input -- including degenerate single-row/column grids --
+        yields a COMPLETE grid: no INVALID survives interpolation."""
+        p = ElasParams(s_delta=3, epsilon=2.0, const_fill=9.0)
+        rng = np.random.default_rng(hash(shape) % (2**32))
+        g = np.where(rng.random(shape) < 0.3,
+                     rng.integers(0, 64, shape).astype(np.float32), INVALID)
+        out = np.asarray(interpolate_support(
+            jnp.asarray(g, jnp.float32), p, border_extend=border_extend
+        ))
+        assert not np.any(out == INVALID)
+
+    @pytest.mark.parametrize("border_extend", [True, False])
+    def test_all_invalid_grid_becomes_const_fill(self, border_extend):
+        """A frame with zero support points degrades to the constant C
+        everywhere -- the paper's rule 3, with no other rule applicable."""
+        p = ElasParams(s_delta=5, epsilon=3.0, const_fill=42.0)
+        g = jnp.full((6, 9), INVALID, jnp.float32)
+        out = np.asarray(interpolate_support(g, p, border_extend=border_extend))
+        np.testing.assert_array_equal(out, np.full((6, 9), 42.0, np.float32))
+
+    def test_idempotent_on_deterministic_grids(self):
+        """Completed grids are fixed points, with and without the border
+        rule (the hypothesis property covers random grids; this pins the
+        Fig. 2 worked example deterministically)."""
+        g = grid(TestFig2Example.INPUT)
+        for border_extend in (True, False):
+            once = interpolate_support(g, FIG2_PARAMS, border_extend=border_extend)
+            twice = interpolate_support(once, FIG2_PARAMS,
+                                        border_extend=border_extend)
+            np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+class TestBorderExtendRule:
+    """The single-sided line-buffer rule of Fig. 2, at BOTH borders of
+    both axes: a truncated *trailing* window extends the leading value; a
+    truncated *leading* window never extends backwards (the causal
+    asymmetry a streaming implementation produces)."""
+
+    P = ElasParams(s_delta=4, epsilon=3.0, const_fill=7.0)
+
+    def test_trailing_border_horizontal(self):
+        g = grid([[20, -1, -1, -1, -1, -1]])
+        out = np.asarray(interpolate_support(g, self.P, border_extend=True))
+        # columns within s_delta of the left value whose RIGHT window is
+        # cut by the border take the leading (left) value alone
+        assert out[0, 3] == pytest.approx(20.0)
+        assert out[0, 4] == pytest.approx(20.0)
+
+    def test_leading_border_horizontal_not_extended(self):
+        g = grid([[-1, -1, -1, -1, -1, 20]])
+        out = np.asarray(interpolate_support(g, self.P, border_extend=True))
+        # the leading (left) border has no left value to extend; the
+        # trailing value alone must NOT creep backwards
+        assert out[0, 0] == pytest.approx(self.P.const_fill)
+
+    def test_trailing_border_vertical(self):
+        g = grid([[20.0]] + [[-1.0]] * 5)          # a single sparse column
+        out = np.asarray(interpolate_support(g, self.P, border_extend=True))
+        assert out[3, 0] == pytest.approx(20.0)
+        assert out[4, 0] == pytest.approx(20.0)
+
+    def test_leading_border_vertical_not_extended(self):
+        g = grid([[-1.0]] * 5 + [[20.0]])
+        out = np.asarray(interpolate_support(g, self.P, border_extend=True))
+        assert out[0, 0] == pytest.approx(self.P.const_fill)
+
+    def test_disabled_rule_falls_through_to_const(self):
+        """With border_extend=False the same trailing-border cells have no
+        pair in either axis and fall through to the constant rule."""
+        g = grid([[20, -1, -1, -1, -1, -1]])
+        out = np.asarray(interpolate_support(g, self.P, border_extend=False))
+        assert out[0, 4] == pytest.approx(self.P.const_fill)
+
+
 @st.composite
 def sparse_grids(draw):
     shape = draw(st.tuples(st.integers(2, 12), st.integers(2, 12)))

@@ -161,6 +161,69 @@ class TestProgramCache:
         assert exact.bucket_shape(41, 63) == (41, 63)
 
 
+class TestMixedBuckets:
+    """Mixed-resolution traffic: the calibrated hot path must never
+    recompile, and completion order ACROSS buckets is documented to be
+    out of order (waves are bucket-homogeneous, so a later same-bucket
+    request can jump an earlier other-bucket one) while per-stream order
+    within a bucket is preserved."""
+
+    def test_autobatch_mixed_buckets_zero_recompiles(self):
+        svc = StereoService(P, batch=4, bucket=16, autobatch=True,
+                            wave_linger=0.05).start()
+        try:
+            svc.warmup([(40, 64), (56, 80)])     # -> (48,64) and (64,80)
+            warm = svc.stats()
+            assert warm.calibrations == 2, "one calibration pass per bucket"
+            assert warm.cache_misses == 0
+            assert len(warm.batch_by_bucket) == 2
+            assert {b for b, _ in warm.batch_by_bucket} == {(48, 64), (64, 80)}
+            assert all(1 <= width <= 4 for _, width in warm.batch_by_bucket)
+            a = _frames(4, h=40, w=64)
+            b = _frames(4, h=56, w=80, seed0=9)
+            for i in range(4):                   # interleave the two buckets
+                svc.submit(i, *a[i], stream_id=0)
+                svc.submit(i, *b[i], stream_id=1)
+            done = svc.collect(8, timeout=300)
+        finally:
+            svc.stop()
+        st = svc.stats()
+        assert len(done) == 8
+        assert st.cache_misses == 0, "recompile on the hot path after warm-up"
+        assert st.calibrations == 2, "live traffic must not re-calibrate"
+        assert st.backend == "ref" or st.backend in available_backends()
+        assert st.tile is not None, "service should run the resolved tile"
+        for sid in (0, 1):                       # per-stream order holds
+            got = [c.frame_id for c in done if c.stream_id == sid]
+            assert got == sorted(got) == list(range(4))
+        shapes = {c.stream_id: c.disparity.shape for c in done}
+        assert shapes == {0: (40, 64), 1: (56, 80)}, "native shapes restored"
+
+    def test_out_of_order_completion_across_buckets(self):
+        """Pin the documented behaviour: submission order A0, B1, A2 with a
+        batch-2 service completes as A0, A2, B1 -- the second A request
+        fills A's wave and jumps the earlier B request."""
+        svc = StereoService(P, batch=2, wave_linger=1.5).start()
+        try:
+            svc.warmup([(40, 64), (56, 80)])
+            a = _frames(2, h=40, w=64)
+            b = _frames(1, h=56, w=80, seed0=9)
+            svc.submit(0, *a[0])                 # bucket A, opens the wave
+            svc.submit(1, *b[0])                 # bucket B, must wait
+            svc.submit(2, *a[1])                 # bucket A, fills the wave
+            done = svc.collect(3, timeout=300)
+        finally:
+            svc.stop()
+        order = [c.frame_id for c in done]
+        assert sorted(order) == [0, 1, 2]
+        assert order == [0, 2, 1], (
+            f"expected the A wave [0, 2] to complete before the "
+            f"earlier-submitted B request 1; got {order}"
+        )
+        st = svc.stats()
+        assert st.waves == 2 and st.cache_misses == 0
+
+
 class TestLifecycle:
     def test_clean_shutdown_with_nonempty_queue(self):
         """stop(drain=False) with queued work discards it, accounts for it,
