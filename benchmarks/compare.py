@@ -1,0 +1,101 @@
+"""Diff two benchmark JSON artifacts row by row.
+
+Both inputs are the ``{"meta": ..., "rows": ...}`` files written by
+``benchmarks.run --json`` (the checked-in ``benchmarks/baseline_ci.json``
+has the same shape).  For every row present in either file the tool prints
+the A and B figures and, where both sides carry an ``fps=`` value, the
+per-stage speedup ``B / A`` -- so a PR's bench-smoke artifact reads as
+"what moved, and by how much" against the baseline instead of two blobs
+of absolute numbers.
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.compare A.json B.json [--only PREFIX]
+
+The CI bench-smoke job runs it after the regression gate, comparing the
+fresh artifact against ``benchmarks/baseline_ci.json``.  Informational
+only: the exit code is 0 unless an input file is unreadable (the gating
+lives in ``benchmarks.run --check``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+
+def _fmt_us(rec: Optional[dict]) -> str:
+    if rec is None:
+        return "-"
+    us = rec.get("us_per_call")
+    if not us:
+        return "-"
+    return f"{us / 1e3:.1f}ms"
+
+
+def _fps(rec: Optional[dict]) -> Optional[float]:
+    return None if rec is None else rec.get("fps")
+
+
+def compare_rows(a: dict, b: dict) -> list[str]:
+    """Human-readable comparison lines for two ``rows`` dicts.
+
+    The last column is B's SPEEDUP over A (>1 means B is faster): the fps
+    ratio ``fb / fa`` where both sides carry an ``fps=`` figure, else the
+    wall-time ratio ``ua / ub`` (time is better when lower, so the ratio
+    flips to keep the column's meaning constant).
+    """
+    names = sorted(set(a) | set(b))
+    width = max((len(n) for n in names), default=4)
+    lines = [
+        f"{'row':<{width}}  {'A':>10} {'B':>10}  {'speedup':>8}",
+    ]
+    for name in names:
+        ra, rb = a.get(name), b.get(name)
+        fa, fb = _fps(ra), _fps(rb)
+        if fa is not None or fb is not None:
+            col_a = f"{fa:.1f}fps" if fa is not None else "missing"
+            col_b = f"{fb:.1f}fps" if fb is not None else "missing"
+            speed = f"{fb / fa:.2f}x" if fa and fb else "-"
+        else:
+            col_a, col_b = _fmt_us(ra), _fmt_us(rb)
+            ua = None if ra is None else ra.get("us_per_call")
+            ub = None if rb is None else rb.get("us_per_call")
+            speed = f"{ua / ub:.2f}x" if ua and ub else "-"
+        lines.append(f"{name:<{width}}  {col_a:>10} {col_b:>10}  {speed:>8}")
+    return lines
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.compare", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("a", help="baseline JSON (the 'before' / reference)")
+    ap.add_argument("b", help="candidate JSON (the 'after' / current run)")
+    ap.add_argument("--only", default=None,
+                    help="restrict to rows whose name starts with this prefix")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+
+    try:
+        with open(args.a) as f:
+            rows_a = json.load(f).get("rows", {})
+        with open(args.b) as f:
+            rows_b = json.load(f).get("rows", {})
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"benchmarks.compare: {e}", file=sys.stderr)
+        return 2
+
+    if args.only:
+        rows_a = {k: v for k, v in rows_a.items() if k.startswith(args.only)}
+        rows_b = {k: v for k, v in rows_b.items() if k.startswith(args.only)}
+    print(f"# A = {args.a}")
+    print(f"# B = {args.b}")
+    for line in compare_rows(rows_a, rows_b):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

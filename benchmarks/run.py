@@ -32,9 +32,17 @@ Flags:
     (``benchmarks/baseline_ci.json``); exit non-zero if any regresses by
     more than ``T`` (default 0.30, i.e. >30% slower fails).  The baseline
     pins the per-stage breakdown: ``table4/support_stage`` (the streaming
-    row-block-tiled support search) and ``table4/dense_stage`` (the
-    row-tiled dense stage) -- the two metrics the streaming/tiling work
-    optimises.
+    row-block-tiled support search), ``table4/dense_stage`` (the
+    gather-free streaming dense stage) and ``table4/interp_stage`` (the
+    paper's regularized interpolation) -- the stages the streaming/tiling
+    work optimises.
+
+Row-by-row diffing of two artifacts (per-stage speedup table)::
+
+  PYTHONPATH=src python -m benchmarks.compare A.json B.json
+
+(the CI bench-smoke job prints it against the checked-in baseline after
+the regression gate).
 
 Regenerating the baseline after an intentional perf change::
 
@@ -95,9 +103,11 @@ def main(argv: list[str] | None = None) -> int:
     from repro.kernels.registry import get_backend, resolve_dispatch
 
     backend, default_tile = resolve_dispatch(args.backend, None)
-    gather = get_backend(backend).tiling.default_gather
+    cap = get_backend(backend).tiling
+    gather = cap.default_gather
+    precision = cap.default_precision
     print(f"# dispatch: backend={backend} default_tile={default_tile} "
-          f"gather={gather}", flush=True)
+          f"gather={gather} precision={precision}", flush=True)
 
     lines: list[str] = []
     print("name,us_per_call,derived")
@@ -136,7 +146,7 @@ def main(argv: list[str] | None = None) -> int:
     if args.json_path:
         meta = {"smoke": args.smoke, "height": height, "width": width,
                 "frames": frames, "backend": backend, "gather": gather,
-                "default_tile": repr(default_tile)}
+                "precision": precision, "default_tile": repr(default_tile)}
         common.write_json(args.json_path, records, meta=meta)
         print(f"# wrote {len(records)} rows to {args.json_path}", flush=True)
 

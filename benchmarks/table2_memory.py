@@ -27,19 +27,24 @@ def _stage_bytes(height: int, width: int, p) -> dict:
     }
 
 
-def _kernel_vmem(width: int, num_disp: int, num_cand: int = 25,
-                 step: int = 5) -> dict:
+def _kernel_vmem(width: int, num_disp: int,
+                 step: int = 5, cell_px: int = 20) -> dict:
     """VMEM working set per kernel program instance (from BlockSpecs).
 
     Both disparity searches stream the d axis: the support kernel's live
     set is one cost row plus the 4-deep (value, d) running-best registers
-    -- O(W), constant in num_disp -- and the dense kernel evaluates only
-    the per-pixel candidate window.  The (bh, D, W) volumes of the
-    materialised oracle exist in no kernel (the untiled dense path
-    likewise streams d; see repro.kernels.ref).
+    -- O(W), constant in num_disp -- and the dense kernel (PR 5) folds the
+    candidate set per scan step from the grid-vector bitmask and the
+    plane-prior band into O(bh x W) (best energy, best d) registers: the
+    gathered-descriptor buffer of the windowed formulation (bh x W x C x 16
+    int8, the old dominant term) is gone along with the candidate tensors.
+    The (bh, D, W) volumes of the materialised oracle exist in no kernel
+    (the untiled dense path likewise streams d; see repro.kernels.ref).
     """
     bh_sobel, bh_support, bh_dense = 8, 4, 4
     gw = width // step
+    cw = width // cell_px
+    acc = 2                       # int16 SAD accumulator (precision="int8")
     return {
         "sobel": 3 * bh_sobel * (width + 2) * 4 + 2 * bh_sobel * width,
         # Streaming support search: descriptors (the right view left-padded
@@ -53,14 +58,19 @@ def _kernel_vmem(width: int, num_disp: int, num_cand: int = 25,
             + 8 * bh_support * width * 4                      # right-view registers
             + 8 * bh_support * gw * 4                         # left-view registers
         ),
-        # Candidate-window dense matching: the working set scales with the
-        # candidate count (20 + 5), NOT num_disp -- the (bh, D, W) volume
-        # of the pre-tiling kernel never exists.
+        # Streaming dense matching: descriptors (right view padded by the
+        # sweep reach), ONE live SAD row + its diagonal shift, per-view
+        # (best energy, best d) registers, the plane-prior band bounds,
+        # and the per-cell candidate bitmask block -- the only D-scaling
+        # term, at one BIT-worth of bool per cell (CW = W / cell_px
+        # columns), not per pixel.
         "dense_match": (
-            2 * bh_dense * width * 16                         # descriptors
-            + 2 * bh_dense * width * num_cand * 16            # gathered desc
-            + 2 * 2 * bh_dense * width * num_cand * 4         # SAD + energy
-            + 2 * bh_dense * width * num_cand * 4             # candidates
+            bh_dense * width * 16                             # left descriptors
+            + bh_dense * (width + num_disp) * 16              # right, padded
+            + 2 * bh_dense * width * acc                      # live SAD + diag row
+            + 2 * 2 * bh_dense * width * 4                    # (e, d) registers x2 views
+            + 2 * 2 * bh_dense * width * 4                    # prior band lo/hi x2 views
+            + 2 * bh_dense * cw * num_disp                    # candidate bitmasks
         ),
         "median": 3 * 16 * (width + 2) * 4,
     }
@@ -79,7 +89,8 @@ def run() -> list[str]:
             f"{st['descriptors_if_materialised']};saving={saving:.1f}x"
             f";gridvec_saving={gv_saving:.1f}x",
         ))
-        vm = _kernel_vmem(w, p.num_disp, step=p.candidate_step)
+        vm = _kernel_vmem(w, p.num_disp, step=p.candidate_step,
+                          cell_px=p.grid_size)
         budget = 16 * 1024 * 1024
         for k, b in vm.items():
             rows.append(row(

@@ -55,21 +55,23 @@ def _tpu_projection(h: int, w: int, p) -> float:
 
 
 def run(height: int = 120, width: int = 160, frames: int = 6,
-        tile_rows: int = 32, support_rows: int = 8,
+        tile_rows: int = 64, support_rows: int = 8,
         backend: str | None = None) -> list[str]:
     p = SYNTH.params
     # Resolve the device-aware dispatch ONCE and report it: the rows below
-    # state which backend / tile / gather formulation actually ran, so a
+    # state which backend / tile / gather / precision actually ran, so a
     # CI artifact from a TPU runner is distinguishable from a CPU one.
     backend, default_tile = resolve_dispatch(backend, None)
+    cap = get_backend(backend).tiling
     tile = TileSpec(rows=tile_rows, support_rows=support_rows,
-                    gather=get_backend(backend).tiling.default_gather)
+                    gather=cap.default_gather,
+                    precision=cap.default_precision)
     rows = []
     rows.append(row(
         "table4/dispatch", 0.0,
         f"backend={backend} tile_rows={tile.rows} "
         f"support_rows={tile.support_block_rows} gather={tile.gather} "
-        f"default_tile={default_tile}",
+        f"precision={tile.precision} default_tile={default_tile}",
     ))
     il, ir, gt = synthetic_stereo_pair(height=height, width=width, d_max=40, seed=3)
     il_j = jnp.asarray(il, jnp.float32)
@@ -111,7 +113,8 @@ def run(height: int = 120, width: int = 160, frames: int = 6,
     )
     rows.append(row("table4/dense_stage", us_dense,
                     f"fps={1e6/us_dense:.1f} tile_rows={tile.rows} "
-                    f"backend={backend} gather={tile.gather}"))
+                    f"backend={backend} gather={tile.gather} "
+                    f"precision={tile.precision}"))
 
     t_hybrid = wall_seconds(
         lambda: pipeline.elas_baseline_disparity(il_j, ir_j, p),

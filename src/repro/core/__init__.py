@@ -12,7 +12,9 @@ from repro.core.pipeline import (  # noqa: F401
 )
 from repro.core.tiling import (  # noqa: F401
     GATHER_IMPLS,
+    PRECISION_IMPLS,
     UNTILED,
+    WINDOWED_GATHERS,
     TileCapability,
     TileSpec,
 )

@@ -12,19 +12,29 @@ The math (cost volume from shifted slices, candidate restriction as a mask
 over the disparity axis, both views from one volume -- and, on the untiled
 "ref" path, the streaming scan over d that replaces the materialised
 volume with running-best registers) lives in :mod:`repro.kernels.ref`;
-this module builds the candidate tensors and owns the *tiled* execution
-strategies:
+this module builds the candidate representations and owns the *tiled*
+execution strategies:
 
-* :func:`dense_match_tiled_xla` -- the XLA fallback: walk the flat
-  batch x row-tile grid with ``lax.map``, evaluating each tile over its
-  candidate window (:func:`repro.kernels.ref.dense_match_rows_windowed_ref`)
-  so the full ``(B, H, W, D)`` cost volume is never materialised.  Dense
-  matching has no cross-row dependency, so the result is bitwise identical
-  to the untiled path for any tile height.
+* :func:`dense_match_stream_xla` -- the DEFAULT path: walk the flat
+  batch x row-tile grid with ``lax.map``, each tile running the
+  gather-free streaming scan over the disparity axis
+  (:func:`repro.kernels.ref.dense_match_rows_stream_ref`).  The candidate
+  set never becomes a tensor: the grid vectors are folded to per-cell
+  disparity bitmasks (:func:`candidate_bitmask_rows`) and the plane-prior
+  neighbourhood is a two-compare band around ``mu`` inside the scan, so
+  the live working set is one tile's O(rows x W) registers -- constant in
+  D and candidate count.
+* :func:`dense_match_tiled_xla` -- the windowed XLA path: each tile
+  evaluates the energy over its per-pixel candidate window
+  (:func:`repro.kernels.ref.dense_match_rows_windowed_ref`; take /
+  onehot / slice gather formulations).
 * :func:`dense_both_views` / :func:`dense_both_views_batched` -- the
   public entry points; a :class:`~repro.core.tiling.TileSpec` selects
-  between the untiled volume path and a backend's tiled path (declared in
-  the kernel registry).
+  the formulation via ``gather`` and the SAD datapath via ``precision``.
+
+Every path is bitwise identical to every other (dense matching has no
+cross-row dependency and all formulations share the float energy
+expression), so the choice is purely a lowering/locality decision.
 """
 from __future__ import annotations
 
@@ -57,6 +67,42 @@ def candidate_set(
     prior_cands = jnp.round(mu)[..., None] + radius              # (H, W, 2R+1)
     cands = jnp.concatenate([jnp.round(cell_cands), prior_cands], axis=-1)
     return jnp.clip(cands, p.disp_min, p.disp_max).astype(jnp.int32)
+
+
+def candidate_bitmask_rows(
+    grid_vec: jax.Array,       # (CH, CW, K)
+    p: ElasParams,
+    height: int,
+) -> jax.Array:
+    """(H, CW, D) bool: the grid-vector candidate set as a per-cell bitmask.
+
+    ``out[v, cx, i]`` is True iff disparity ``d = disp_min + i`` is one of
+    the rounded, clipped grid-vector candidates of the cell at (the cell
+    row of pixel row ``v``, ``cx``) -- exactly the per-cell half of the
+    set :func:`candidate_set` materialises per pixel.  The streaming dense
+    scan consumes this instead of a candidate tensor: rows are upsampled
+    to pixel resolution here (so row tiles slice it like any other input)
+    while columns stay at cell resolution, upsampled per scan step by a
+    static repeat (:func:`repro.kernels.ref.upsample_cells`).  The
+    plane-prior half of the candidate set never needs a tensor at all: it
+    is the band ``|d - round(mu)| <= plane_radius`` (clipped), two
+    compares per step.
+    """
+    ch, cw, _ = grid_vec.shape
+    vals = jnp.clip(
+        jnp.round(grid_vec), p.disp_min, p.disp_max
+    ).astype(jnp.int32)
+    d = jnp.arange(p.num_disp, dtype=jnp.int32) + p.disp_min
+    cells = jnp.any(vals[..., None] == d, axis=-2)               # (CH, CW, D)
+    # Pixel-row upsample: replicate grid_size rows per cell row, tail rows
+    # extend the last cell -- cell_index's row mapping, gather-free.
+    rows = jnp.repeat(cells, p.grid_size, axis=0)
+    if rows.shape[0] < height:
+        tail = jnp.broadcast_to(
+            rows[-1:], (height - rows.shape[0], cw, p.num_disp)
+        )
+        rows = jnp.concatenate([rows, tail], axis=0)
+    return rows[:height]
 
 
 @functools.partial(
@@ -94,21 +140,6 @@ def dense_match_tiled_xla(
     """
     from repro.kernels import ref as _ref   # late import: kernels build on core
 
-    batched = desc_l.ndim == 4
-    if not batched:
-        desc_l, desc_r = desc_l[None], desc_r[None]
-        mu_l, mu_r = mu_l[None], mu_r[None]
-        cand_l, cand_r = cand_l[None], cand_r[None]
-    b, h, w, _ = desc_l.shape
-    bh = min(tile_rows, h)
-    t = -(-h // bh)
-    pad = t * bh - h
-
-    def split(x: jax.Array) -> jax.Array:
-        if pad:
-            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
-        return x.reshape(b * t, bh, *x.shape[2:])
-
     def one_tile(tile):
         tdl, tdr, tml, tmr, tcl, tcr = tile
         return _ref.dense_match_rows_windowed_ref(
@@ -118,17 +149,95 @@ def dense_match_tiled_xla(
             disp_min=disp_min,
         )
 
-    disp_l, disp_r = jax.lax.map(
-        one_tile,
-        (split(desc_l), split(desc_r), split(mu_l), split(mu_r),
-         split(cand_l), split(cand_r)),
+    return _map_row_tiles(
+        (desc_l, desc_r, mu_l, mu_r, cand_l, cand_r), one_tile, tile_rows
     )
+
+
+def _map_row_tiles(inputs: tuple, one_tile, tile_rows: int):
+    """Shared row-tiling scaffolding for the XLA dense paths.
+
+    Every array in ``inputs`` is (H, ...) or (B, H, ...) with matching
+    leading extents; rows are padded up to whole tiles, batch and tile
+    axes are flattened together, ``one_tile`` maps over the flat grid via
+    ``lax.map`` (one tile live at a time -- tile j of frame i never waits
+    for the whole of frame i-1), and the two (bh, W) outputs are
+    reassembled and cropped.  The single home for the promote/pad/split/
+    map/join dance both the windowed and the streaming tiled paths use.
+    """
+    batched = inputs[0].ndim == 4
+    if not batched:
+        inputs = tuple(x[None] for x in inputs)
+    b, h = inputs[0].shape[:2]
+    w = inputs[0].shape[2]
+    bh = min(tile_rows, h)
+    t = -(-h // bh)
+    pad = t * bh - h
+
+    def split(x: jax.Array) -> jax.Array:
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        return x.reshape(b * t, bh, *x.shape[2:])
+
+    disp_l, disp_r = jax.lax.map(one_tile, tuple(split(x) for x in inputs))
 
     def join(d: jax.Array) -> jax.Array:
         d = d.reshape(b, t * bh, w)[:, :h]
         return d if batched else d[0]
 
     return join(disp_l), join(disp_r)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_disp", "disp_min", "plane_radius", "cell_px", "beta", "gamma",
+        "sigma", "match_texture", "tile_rows", "precision",
+    ),
+)
+def dense_match_stream_xla(
+    desc_l: jax.Array,          # (H, W, 16) or (B, H, W, 16) int8
+    desc_r: jax.Array,
+    mu_l: jax.Array,            # (H, W) or (B, H, W) float32
+    mu_r: jax.Array,
+    gmask_l: jax.Array,         # (H, CW, D) or (B, H, CW, D) bool
+    gmask_r: jax.Array,
+    *,
+    num_disp: int,
+    disp_min: int,
+    plane_radius: int,
+    cell_px: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+    tile_rows: int = 16,
+    precision: str = "f32",
+) -> tuple[jax.Array, jax.Array]:
+    """Tiled XLA streaming dense matching over the flat batch x tile grid.
+
+    ``lax.map`` runs one tile at a time through the gather-free scan
+    (:func:`repro.kernels.ref.dense_match_rows_stream_ref`), so the live
+    working set is one tile's O(tile_rows x W) running-best registers --
+    no candidate tensor, no gathered descriptors, constant in both D and
+    the wave width.  Accepts single frames or a leading batch axis (batch
+    and tile axes are flattened together).  Bitwise identical to the
+    windowed paths for any tile height.
+    """
+    from repro.kernels import ref as _ref   # late import: kernels build on core
+
+    def one_tile(tile):
+        tdl, tdr, tml, tmr, tgl, tgr = tile
+        return _ref.dense_match_rows_stream_ref(
+            tdl, tdr, tml, tmr, tgl, tgr,
+            num_disp=num_disp, disp_min=disp_min, plane_radius=plane_radius,
+            cell_px=cell_px, beta=beta, gamma=gamma, sigma=sigma,
+            match_texture=match_texture, precision=precision,
+        )
+
+    return _map_row_tiles(
+        (desc_l, desc_r, mu_l, mu_r, gmask_l, gmask_r), one_tile, tile_rows
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
@@ -150,12 +259,26 @@ def dense_both_views(
     resolve to the device default and the backend's default tile;
     ``tile`` selects the backend's row-tiled dense path (bitwise
     identical to untiled; a backend that does not declare tiling support
-    falls back to its untiled entry).
+    falls back to its untiled entry).  With ``tile.gather == "stream"``
+    (the resolved default) no candidate tensor is built at all: the
+    grid vectors become per-cell disparity bitmasks and the backend's
+    gather-free streaming scan folds candidates on the fly.
     """
     from repro.kernels import ops
-    from repro.kernels.registry import resolve_dispatch
+    from repro.kernels.registry import get_backend, resolve_dispatch
 
     backend, tile = resolve_dispatch(backend, tile)
+    be = get_backend(backend)
+    eff = be.tiling.clamp(tile)
+    if (eff is not None and eff.gather == "stream"
+            and be.dense_match_stream is not None):
+        h = desc_l.shape[0]
+        gm_l = candidate_bitmask_rows(grid_vec_l, p, h)
+        gm_r = candidate_bitmask_rows(grid_vec_r, p, h)
+        return ops.dense_match_stream(
+            desc_l, desc_r, mu_l, mu_r, gm_l, gm_r, p,
+            backend=backend, tile=tile,
+        )
     cand_l = candidate_set(mu_l, grid_vec_l, p)
     cand_r = candidate_set(mu_r, grid_vec_r, p)
     return ops.dense_match(
@@ -189,11 +312,20 @@ def dense_both_views_batched(
     from repro.kernels.registry import get_backend, resolve_dispatch
 
     backend, tile = resolve_dispatch(backend, tile)
+    be = get_backend(backend)
+    eff = be.tiling.clamp(tile)
+    if (eff is not None and eff.gather == "stream"
+            and be.dense_match_stream is not None):
+        h = desc_l.shape[1]
+        gm_l = jax.vmap(lambda g: candidate_bitmask_rows(g, p, h))(grid_vec_l)
+        gm_r = jax.vmap(lambda g: candidate_bitmask_rows(g, p, h))(grid_vec_r)
+        return ops.dense_match_stream(
+            desc_l, desc_r, mu_l, mu_r, gm_l, gm_r, p,
+            backend=backend, tile=tile,
+        )
     cands_l = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_l, grid_vec_l)
     cands_r = jax.vmap(lambda m, g: candidate_set(m, g, p))(mu_r, grid_vec_r)
 
-    be = get_backend(backend)
-    eff = be.tiling.clamp(tile)
     if eff is not None and be.tiling.batched_map:
         return be.dense_match_tiled(
             desc_l, desc_r, mu_l, mu_r, cands_l, cands_r,

@@ -34,7 +34,11 @@ identical to the untiled paths; the ``*_batched`` variants are the
 wave-shaped forms that walk the flat batch x tile grid one tile at a
 time.  Untiled or not, no stage materialises a ``(rows, D, W)`` cost
 volume: the disparity axis is streamed with running-best registers
-(:mod:`repro.kernels.ref`).
+(:mod:`repro.kernels.ref`).  With the default ``gather="stream"`` tile
+the dense stage is gather-free end to end -- the candidate set is folded
+per scan step from a grid-vector bitmask and the plane-prior band, so no
+per-pixel candidate tensor exists either; ``TileSpec.precision`` picks
+the (bitwise-identical) int8/int16 SAD datapath.
 
 Dispatch is device-aware: every stage accepts ``backend=None`` /
 ``tile=None`` and resolves them through
@@ -87,6 +91,7 @@ def _dense_priors(
     return mu_l, mu_r, gv_l, gv_r
 
 
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def ielas_dense_stage(
     dl: jax.Array,
     dr: jax.Array,
@@ -95,7 +100,12 @@ def ielas_dense_stage(
     backend: Optional[str] = None,
     tile: TileArg = None,
 ) -> jax.Array:
-    """Dense disparity for both views + post-processing -> final left map."""
+    """Dense disparity for both views + post-processing -> final left map.
+
+    One jitted program (like its batched sibling): priors, grid-vector
+    bitmasks, the streaming match, and post-processing fuse into a single
+    XLA computation instead of a chain of separately dispatched sub-jits.
+    """
     backend, tile = resolve_dispatch(backend, tile)
     h, w = dl.shape[:2]
     mu_l, mu_r, gv_l, gv_r = _dense_priors(support_left, h, w, p)

@@ -75,18 +75,22 @@ def median3x3(disp: jax.Array) -> jax.Array:
     """3x3 median over valid pixels; invalid pixels stay invalid.
 
     Invalid neighbours are replaced by the centre value so they do not bias
-    the median (equivalent to clamping the window to valid support).
+    the median (equivalent to clamping the window to valid support).  The
+    median itself is Paeth's 19-op min/max selection network
+    (:func:`repro.kernels.ref.median9`) -- value-identical to sorting the
+    window and taking element 4, but ~10x cheaper under XLA:CPU, which
+    matters because this filter sits inside the gated dense stage.
     """
+    from repro.kernels.ref import median9   # late import: kernels build on core
+
     h, w = disp.shape
     padded = jnp.pad(disp, 1, mode="edge")
-    stack = []
+    wins = []
     for dy in range(3):
         for dx in range(3):
-            stack.append(padded[dy : dy + h, dx : dx + w])
-    win = jnp.stack(stack, axis=-1)                       # (H, W, 9)
-    centre = disp[..., None]
-    win = jnp.where(win == INVALID, centre, win)
-    med = jnp.sort(win, axis=-1)[..., 4]
+            win = padded[dy : dy + h, dx : dx + w]
+            wins.append(jnp.where(win == INVALID, disp, win))
+    med = median9(wins)
     return jnp.where(disp == INVALID, INVALID, med)
 
 

@@ -43,19 +43,45 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-#: The dense-stage candidate-gather formulations (bitwise identical):
+#: The candidate-*gather* formulations of the windowed dense path (all
+#: bitwise identical; each fetches the per-pixel candidate descriptors from
+#: a pre-built ``(.., W, C)`` candidate tensor):
 #:
 #: ``"take"``
 #:     ``jnp.take_along_axis`` along the row axis -- the XLA-native gather;
-#:     fastest on CPU, but a data-dependent gather Mosaic cannot lower.
+#:     a data-dependent gather Mosaic cannot lower.
 #: ``"onehot"``
 #:     the gather as a one-hot matmul over the row axis -- MXU-friendly,
-#:     gather-free; the Mosaic-ready default for the TPU backend.
+#:     gather-free.
 #: ``"slice"``
 #:     windowed ``lax.dynamic_slice`` sweep over the disparity axis with a
-#:     compare-and-select per candidate slot -- shifted slices only, the
-#:     same access pattern as the streaming cost-volume scan.
-GATHER_IMPLS = ("take", "onehot", "slice")
+#:     compare-and-select per candidate slot -- shifted slices only, with
+#:     an O(1)-in-D jaxpr.
+WINDOWED_GATHERS = ("take", "onehot", "slice")
+
+#: All dense-stage candidate-evaluation formulations a ``TileSpec`` may
+#: request.  On top of the three windowed gathers, ``"stream"`` is the
+#: gather-free streaming scan (the default everywhere): one ``lax.scan``
+#: over the disparity axis computes a shifted-slice SAD row for ALL pixels
+#: per step and folds it into running ``(best energy, best d)`` registers
+#: under a cheap per-step candidate mask (the grid-vector bitmask upsampled
+#: per grid cell OR a ``|d - round(mu)| <= plane_radius`` band around the
+#: plane prior) -- no candidate tensor, no gather, O(W x rows) live set.
+#: Every formulation is bitwise identical to the others.
+GATHER_IMPLS = WINDOWED_GATHERS + ("stream",)
+
+#: Dense-stage SAD arithmetic precisions (bitwise identical -- see
+#: :class:`TileSpec`):
+#:
+#: ``"f32"``
+#:     the reference arithmetic: descriptors widened to int32 for the SAD,
+#:     energies in float32.
+#: ``"int8"``
+#:     the low-precision datapath: descriptors stay int8 and the SAD
+#:     accumulates in int16 (exact -- the 16-sample SAD is bounded by
+#:     16 * 255 = 4080 < 2^15) before the float32 energy.  Narrower
+#:     vectors per lane on TPU; bitwise identical outputs by construction.
+PRECISION_IMPLS = ("f32", "int8")
 
 #: Explicit "run the untiled path" request, now that ``tile=None`` resolves
 #: to the backend's default tile.  A string so it remains hashable and
@@ -76,14 +102,17 @@ class TileSpec:
     ``rows`` when unset.  Both must be positive; the last tile of an
     extent that is not a multiple of the tile height is padded and cropped
     (a partial tile), so odd sizes need no special handling by callers.
-    ``gather`` picks the dense stage's candidate-gather formulation (one
-    of :data:`GATHER_IMPLS`); all formulations are bitwise identical, so
-    like the tile heights it is purely a lowering/locality decision.
+    ``gather`` picks the dense stage's candidate-evaluation formulation
+    (one of :data:`GATHER_IMPLS`; ``"stream"`` is the gather-free scan
+    over the disparity axis) and ``precision`` its SAD arithmetic (one of
+    :data:`PRECISION_IMPLS`); all combinations are bitwise identical, so
+    like the tile heights they are purely lowering/locality decisions.
     """
 
     rows: int = 16
     support_rows: Optional[int] = None
     gather: str = "take"
+    precision: str = "f32"
 
     def __post_init__(self):
         if self.rows < 1:
@@ -95,6 +124,11 @@ class TileSpec:
         if self.gather not in GATHER_IMPLS:
             raise ValueError(
                 f"gather must be one of {GATHER_IMPLS}, got {self.gather!r}"
+            )
+        if self.precision not in PRECISION_IMPLS:
+            raise ValueError(
+                f"precision must be one of {PRECISION_IMPLS}, "
+                f"got {self.precision!r}"
             )
 
     @property
@@ -149,9 +183,14 @@ class TileCapability:
     ``support_default_rows`` / ``support_max_rows``
         the same pair for the support stage, in candidate-grid rows.
     ``default_gather``
-        the candidate-gather formulation the backend's compiler prefers
-        (one of :data:`GATHER_IMPLS`); used when a resolved default tile
-        is built and as documentation of what the backend can lower.
+        the candidate-evaluation formulation the backend's compiler
+        prefers (one of :data:`GATHER_IMPLS`); used when a resolved
+        default tile is built and as documentation of what the backend
+        can lower.
+    ``default_precision``
+        the dense-stage SAD arithmetic the backend prefers (one of
+        :data:`PRECISION_IMPLS`); ``"int8"`` keeps the descriptor
+        datapath narrow on backends whose vector units reward it.
     """
 
     tiled_dense: bool = False
@@ -162,12 +201,18 @@ class TileCapability:
     support_default_rows: int = 16
     support_max_rows: Optional[int] = None
     default_gather: str = "take"
+    default_precision: str = "f32"
 
     def __post_init__(self):
         if self.default_gather not in GATHER_IMPLS:
             raise ValueError(
                 f"default_gather must be one of {GATHER_IMPLS}, "
                 f"got {self.default_gather!r}"
+            )
+        if self.default_precision not in PRECISION_IMPLS:
+            raise ValueError(
+                f"default_precision must be one of {PRECISION_IMPLS}, "
+                f"got {self.default_precision!r}"
             )
 
     def clamp(self, tile: TileArg) -> Optional[TileSpec]:
@@ -203,6 +248,7 @@ class TileCapability:
             rows=self.default_rows,
             support_rows=self.support_default_rows if self.tiled_support else None,
             gather=self.default_gather,
+            precision=self.default_precision,
         )
 
     def resolve(self, tile: TileArg) -> Union[TileSpec, str]:

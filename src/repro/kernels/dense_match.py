@@ -137,3 +137,119 @@ def dense_match_pallas(
         ],
         interpret=interpret,
     )(desc_l, desc_r, mu_l, mu_r, cand_l, cand_r)
+
+
+def _dense_stream_kernel(
+    desc_l_ref,
+    desc_r_ref,
+    mu_l_ref,
+    mu_r_ref,
+    gmask_l_ref,
+    gmask_r_ref,
+    out_l_ref,
+    out_r_ref,
+    *,
+    num_disp: int,
+    disp_min: int,
+    plane_radius: int,
+    cell_px: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+    precision: str,
+):
+    disp_l, disp_r = ref.dense_match_rows_stream_ref(
+        desc_l_ref[...],
+        desc_r_ref[...],
+        mu_l_ref[...],
+        mu_r_ref[...],
+        gmask_l_ref[...],
+        gmask_r_ref[...],
+        num_disp=num_disp,
+        disp_min=disp_min,
+        plane_radius=plane_radius,
+        cell_px=cell_px,
+        beta=beta,
+        gamma=gamma,
+        sigma=sigma,
+        match_texture=match_texture,
+        precision=precision,
+    )
+    out_l_ref[...] = disp_l
+    out_r_ref[...] = disp_r
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_disp", "disp_min", "plane_radius", "cell_px", "beta", "gamma",
+        "sigma", "match_texture", "block_rows", "interpret", "precision",
+    ),
+)
+def dense_match_stream_pallas(
+    desc_l: jax.Array,          # (H, W, 16) int8
+    desc_r: jax.Array,          # (H, W, 16) int8
+    mu_l: jax.Array,            # (H, W) float32
+    mu_r: jax.Array,            # (H, W) float32
+    gmask_l: jax.Array,         # (H, CW, D) bool grid-vector bitmask rows
+    gmask_r: jax.Array,         # (H, CW, D) bool
+    *,
+    num_disp: int,
+    disp_min: int,
+    plane_radius: int,
+    cell_px: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+    block_rows: int = 4,
+    interpret: bool = True,
+    precision: str = "f32",
+) -> tuple[jax.Array, jax.Array]:
+    """Row-tiled STREAMING dense matching: the gather-free scan-over-d.
+
+    The kernel body is :func:`repro.kernels.ref.dense_match_rows_stream_ref`
+    -- one ``lax.scan`` over the disparity axis folding shifted-slice SAD
+    rows into running (best energy, best d) registers under the grid-vector
+    bitmask / plane-prior-band candidate mask.  Everything in the body is a
+    slice, compare, or select, so unlike the windowed ``take`` gather there
+    is no construct Mosaic cannot lower, and the VMEM working set per
+    program is the descriptors plus O(block_rows x W) registers and one
+    (block_rows, CW, D) bitmask block -- no gathered-descriptor buffer.
+    ``precision="int8"`` keeps the SAD datapath int8/int16 (exact; bitwise
+    identical outputs).
+    """
+    h, w, k = desc_l.shape
+    cw, nd = gmask_l.shape[1], gmask_l.shape[2]
+    bh = min(block_rows, h)
+    grid = (pl.cdiv(h, bh),)
+
+    desc_spec = pl.BlockSpec((bh, w, k), lambda i: (i, 0, 0))
+    map_spec = pl.BlockSpec((bh, w), lambda i: (i, 0))
+    mask_spec = pl.BlockSpec((bh, cw, nd), lambda i: (i, 0, 0))
+
+    kernel = functools.partial(
+        _dense_stream_kernel,
+        num_disp=num_disp,
+        disp_min=disp_min,
+        plane_radius=plane_radius,
+        cell_px=cell_px,
+        beta=beta,
+        gamma=gamma,
+        sigma=sigma,
+        match_texture=match_texture,
+        precision=precision,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[desc_spec, desc_spec, map_spec, map_spec,
+                  mask_spec, mask_spec],
+        out_specs=[map_spec, map_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(desc_l, desc_r, mu_l, mu_r, gmask_l, gmask_r)

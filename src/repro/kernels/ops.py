@@ -27,11 +27,15 @@ tiling capability in the registry, and the wrappers route to the backend's
 row-tiled entry points (bitwise identical to the untiled paths) when the
 caller asks for tiling and the backend supports it, threading the tile's
 ``gather`` formulation (take_along_axis / one-hot matmul / windowed
-dynamic slices -- all bitwise identical) into the dense kernels.  Both
-untiled "ref" search ops are the STREAMING scan formulations -- the
-materialised oracles stay in :mod:`repro.kernels.ref` as the ground truth
-the streaming paths are pinned against, so no registered backend
-materialises a ``(rows, D, W)`` volume anywhere.
+dynamic slices / the gather-free streaming scan -- all bitwise identical)
+and its ``precision`` (f32 / int8 SAD datapath -- also bitwise identical)
+into the dense kernels.  ``gather="stream"`` -- every built-in backend's
+default -- runs :func:`dense_match_stream`, which consumes grid-vector
+bitmasks instead of candidate tensors.  Both untiled "ref" search ops are
+the STREAMING scan formulations -- the materialised oracles stay in
+:mod:`repro.kernels.ref` as the ground truth the streaming paths are
+pinned against, so no registered backend materialises a ``(rows, D, W)``
+volume anywhere.
 """
 from __future__ import annotations
 
@@ -42,9 +46,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import ElasParams
-from repro.core.tiling import TileArg, TileCapability
+from repro.core.tiling import TileArg, TileCapability, TileSpec
 from repro.kernels import ref
-from repro.kernels.dense_match import dense_match_pallas
+from repro.kernels.dense_match import dense_match_pallas, dense_match_stream_pallas
 from repro.kernels.median import median3x3_pallas
 from repro.kernels.registry import (
     KernelBackend,
@@ -84,6 +88,13 @@ def _dense_tiled_ref(*args, **kwargs):
     return dense_match_tiled_xla(*args, **kwargs)
 
 
+def _dense_stream_ref(*args, **kwargs):
+    """Streaming gather-free dense path (late import: core builds on kernels)."""
+    from repro.core.dense import dense_match_stream_xla
+
+    return dense_match_stream_xla(*args, **kwargs)
+
+
 def _support_tiled_ref(*args, **kwargs):
     """Row-block-tiled XLA fallback (late import: core builds on kernels)."""
     from repro.core.support import support_match_tiled_xla
@@ -99,9 +110,12 @@ register_backend(KernelBackend(
     median3x3=_median3x3_ref,
     dense_match_tiled=_dense_tiled_ref,
     support_match_tiled=_support_tiled_ref,
+    dense_match_stream=_dense_stream_ref,
     tiling=TileCapability(
-        tiled_dense=True, batched_map=True, default_rows=32,
+        tiled_dense=True, batched_map=True, default_rows=64,
         tiled_support=True, support_default_rows=8,
+        default_gather="stream",   # gather-free scan: fastest under XLA too
+        default_precision="int8",  # int16 SAD: exact, ~1.5x on AVX lanes
     ),
     description="pure-jnp streaming-scan math (XLA:CPU friendly)",
 ))
@@ -111,6 +125,11 @@ register_backend(KernelBackend(
 def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBackend:
     def dense_tiled(*args, tile_rows: int, **kwargs):
         return dense_match_pallas(
+            *args, block_rows=tile_rows, interpret=interpret, **kwargs
+        )
+
+    def dense_stream(*args, tile_rows: int, **kwargs):
+        return dense_match_stream_pallas(
             *args, block_rows=tile_rows, interpret=interpret, **kwargs
         )
 
@@ -127,10 +146,12 @@ def _pallas_backend(name: str, interpret: bool, description: str) -> KernelBacke
         median3x3=functools.partial(median3x3_pallas, interpret=interpret),
         dense_match_tiled=dense_tiled,
         support_match_tiled=support_tiled,
+        dense_match_stream=dense_stream,
         tiling=TileCapability(
             tiled_dense=True, default_rows=4, max_rows=64,
             tiled_support=True, support_default_rows=4, support_max_rows=64,
-            default_gather="onehot",   # Mosaic lowers matmuls, not gathers
+            default_gather="stream",   # slices/compares only: Mosaic-ready
+            default_precision="int8",  # narrow SAD datapath (exact; bitwise)
         ),
         description=description,
     )
@@ -219,17 +240,84 @@ def dense_match_candidates(
     )
     eff = be.tiling.clamp(tile)
     if eff is not None:
+        gather = eff.gather
+        if gather == "stream":
+            # The streaming scan consumes grid bitmasks, not the candidate
+            # tensors this entry is given (dense_both_views routes stream
+            # requests to dense_match_stream before candidates exist).
+            # For pre-built candidates the windowed "slice" sweep is the
+            # bitwise-identical O(1)-in-D formulation.
+            gather = "slice"
         return be.dense_match_tiled(
             desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
-            tile_rows=eff.rows, gather_impl=eff.gather,
+            tile_rows=eff.rows, gather_impl=gather,
             disp_min=p.disp_min, **kwargs,
         )
-    return be.dense_match(desc_l, desc_r, mu_l, mu_r, cand_l, cand_r, **kwargs)
+    return be.dense_match(
+        desc_l, desc_r, mu_l, mu_r, cand_l, cand_r,
+        disp_min=p.disp_min, **kwargs,
+    )
 
 
 # Historical public name; the candidate tensors are always pre-built by
 # the caller, so the two entry points are one function.
 dense_match = dense_match_candidates
+
+
+@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def dense_match_stream(
+    desc_l: jax.Array,          # (H, W, 16) or (B, H, W, 16) int8
+    desc_r: jax.Array,
+    mu_l: jax.Array,            # (H, W) or (B, H, W) float32
+    mu_r: jax.Array,
+    gmask_l: jax.Array,         # (H, CW, D) or (B, H, CW, D) bool
+    gmask_r: jax.Array,
+    p: ElasParams,
+    backend: Backend = None,
+    tile: TileArg = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather-free streaming dense matching from per-cell candidate bitmasks.
+
+    The candidate set never becomes a tensor: ``gmask`` is the grid-vector
+    bitmask (:func:`repro.core.dense.candidate_bitmask_rows`) and the
+    plane-prior band is derived from ``mu`` inside the scan.  ``backend``
+    / ``tile`` resolve as in :func:`dense_match_candidates`; the tile's
+    ``rows`` and ``precision`` reach the backend's streaming entry (an
+    :data:`~repro.core.tiling.UNTILED` request runs one full-height
+    block).  Accepts single frames or a leading batch axis; a backend
+    without ``batched_map`` is vmapped per frame.
+    """
+    backend, tile = resolve_dispatch(backend, tile)
+    be = get_backend(backend)
+    if be.dense_match_stream is None:
+        raise ValueError(
+            f"backend {backend!r} has no streaming dense entry "
+            f"(dense_match_stream); use a windowed gather TileSpec instead"
+        )
+    eff = be.tiling.clamp(tile)
+    rows = eff.rows if eff is not None else desc_l.shape[-3]
+    precision = (
+        eff.precision if eff is not None
+        else tile.precision if isinstance(tile, TileSpec) else "f32"
+    )
+    kwargs = dict(
+        num_disp=p.num_disp,
+        disp_min=p.disp_min,
+        plane_radius=p.plane_radius,
+        cell_px=p.grid_size,
+        beta=p.beta,
+        gamma=p.gamma,
+        sigma=p.sigma,
+        match_texture=p.match_texture,
+        tile_rows=rows,
+        precision=precision,
+    )
+    if desc_l.ndim == 4 and not be.tiling.batched_map:
+        per_frame = lambda *a: be.dense_match_stream(*a, **kwargs)  # noqa: E731
+        return jax.vmap(per_frame)(desc_l, desc_r, mu_l, mu_r, gmask_l, gmask_r)
+    return be.dense_match_stream(
+        desc_l, desc_r, mu_l, mu_r, gmask_l, gmask_r, **kwargs
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

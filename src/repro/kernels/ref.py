@@ -20,11 +20,14 @@ Two formulations of the disparity search live side by side:
   ``argmin``) stacks the full ``(bh, D, W)`` volume and reduces it -- the
   semantic ground truth every other path is pinned against;
 * the STREAMING scan (:func:`support_match_rows_streaming`,
-  :func:`dense_match_rows_streaming`) is a single ``lax.scan`` over ``d``
-  carrying running-best registers per column, so the live working set is
-  O(W) per row block, the jaxpr is O(1) in D, and -- because each scan
-  step computes the exact same integer cost row the volume would hold at
-  slot ``d`` -- the result is *bitwise identical* to the oracle.
+  :func:`dense_match_rows_streaming`, and the gather-free
+  :func:`dense_match_rows_stream_ref`, which folds the candidate set as a
+  per-step grid-bitmask + plane-prior-band mask instead of touching a
+  candidate tensor) is a single ``lax.scan`` over ``d`` carrying
+  running-best registers per column, so the live working set is O(W) per
+  row block, the jaxpr is O(1) in D, and -- because each scan step
+  computes the exact same integer cost row the volume would hold at slot
+  ``d`` -- the result is *bitwise identical* to the oracle.
 
 The diagonal-in-one-pass trick: at scan step ``d`` the freshly computed
 left-view cost row ``CV[d, :]`` *is* the right-view row up to a shift,
@@ -38,13 +41,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.tiling import GATHER_IMPLS
+from repro.core.tiling import PRECISION_IMPLS, WINDOWED_GATHERS
 
 # Python literals (NOT jnp arrays): pallas kernel bodies must not capture
 # traced constants, and literals fold into the kernel jaxpr.
 BIG = 1 << 28
 BIGF = 1e9
 INVALID = -1.0
+
+# Unroll factor for the streaming dense scan.  XLA:CPU pays a per-step
+# dispatch/fusion cost on small scan bodies that unrolling amortises
+# (~2x wall time on the QVGA row tile); unrolling replicates the body a
+# FIXED number of times, so the jaxpr stays O(1) in D and the sequential
+# fold semantics (hence every output bit) are unchanged.
+SCAN_UNROLL = 8
 
 
 # --------------------------------------------------------------------------
@@ -70,8 +80,11 @@ def sobel_rows_ref(top: jax.Array, mid: jax.Array, bot: jax.Array) -> tuple[jax.
 # --------------------------------------------------------------------------
 # cost volume building blocks (shared by support + dense)
 # --------------------------------------------------------------------------
-def cost_volume_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int) -> jax.Array:
-    """CV[b, d, u] for a row block.
+def cost_volume_rows(
+    desc_l: jax.Array, desc_r: jax.Array, num_disp: int, disp_min: int = 0
+) -> jax.Array:
+    """CV[b, i, u] for a row block, slot ``i`` holding disparity
+    ``d = disp_min + i``.
 
     desc_l/desc_r: (bh, W, 16) int8.  Returns (bh, D, W) int32; entries with
     u - d < 0 are BIG.  Built from D shifted slices of desc_r.
@@ -79,26 +92,32 @@ def cost_volume_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int) -> jax
     bh, w, k = desc_l.shape
     dl = desc_l.astype(jnp.int32)
     dr = desc_r.astype(jnp.int32)
-    dr_pad = jnp.pad(dr, ((0, 0), (num_disp, 0), (0, 0)))        # left-pad by D
+    reach = num_disp + disp_min       # max column shift any slot performs
+    dr_pad = jnp.pad(dr, ((0, 0), (reach, 0), (0, 0)))
     u = jnp.arange(w)[None, :]                                   # loop-invariant
     cvs = []
-    for d in range(num_disp):
-        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, num_disp - d, w, axis=1)
+    for i in range(num_disp):
+        d = disp_min + i
+        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, reach - d, w, axis=1)
         sad = jnp.sum(jnp.abs(dl - shifted), axis=-1)            # (bh, W)
         cvs.append(jnp.where(u - d >= 0, sad, BIG))
     return jnp.stack(cvs, axis=1)                                # (bh, D, W)
 
 
-def diagonal_volume(cv: jax.Array) -> jax.Array:
-    """CV_R[b, d, u] = CV[b, d, u + d] (right-view volume as diagonal slices).
+def diagonal_volume(cv: jax.Array, disp_min: int = 0) -> jax.Array:
+    """CV_R[b, i, u] = CV[b, i, u + disp_min + i] (right-view volume as
+    diagonal slices).
 
-    Entries with u + d >= W are BIG.
+    Entries shifted past the right edge are BIG.
     """
     bh, nd, w = cv.shape
-    cv_pad = jnp.pad(cv, ((0, 0), (0, 0), (0, nd)), constant_values=BIG)
+    reach = nd + disp_min
+    cv_pad = jnp.pad(cv, ((0, 0), (0, 0), (0, reach)), constant_values=BIG)
     rows = []
-    for d in range(nd):
-        rows.append(jax.lax.dynamic_slice_in_dim(cv_pad[:, d], d, w, axis=1))
+    for i in range(nd):
+        rows.append(
+            jax.lax.dynamic_slice_in_dim(cv_pad[:, i], disp_min + i, w, axis=1)
+        )
     return jnp.stack(rows, axis=1)
 
 
@@ -193,24 +212,28 @@ def streaming_best_two(cost: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array
     return _finalize4(vals, idxs)
 
 
-def _scan_cost_rows(desc_l: jax.Array, desc_r: jax.Array, num_disp: int):
+def _scan_cost_rows(
+    desc_l: jax.Array, desc_r: jax.Array, num_disp: int, disp_min: int = 0
+):
     """Shared setup for the streaming scans: a function computing the
     (bh, W) int32 cost row at traced disparity ``d`` -- elementwise
-    identical to slot ``d`` of :func:`cost_volume_rows` -- plus its
-    right-view diagonal shift ``CV_R[d, u] = CV[d, u + d]``."""
+    identical to the slot :func:`cost_volume_rows` holds for ``d`` -- plus
+    its right-view diagonal shift ``CV_R[d, u] = CV[d, u + d]``.  The
+    sweep domain is ``[disp_min, disp_min + num_disp)``."""
     w = desc_l.shape[1]
     dl = desc_l.astype(jnp.int32)
     dr = desc_r.astype(jnp.int32)
-    dr_pad = jnp.pad(dr, ((0, 0), (num_disp, 0), (0, 0)))        # left-pad by D
+    reach = num_disp + disp_min       # max column shift the sweep performs
+    dr_pad = jnp.pad(dr, ((0, 0), (reach, 0), (0, 0)))
     u = jnp.arange(w)[None, :]
 
     def cost_row(d: jax.Array) -> jax.Array:
-        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, num_disp - d, w, axis=1)
+        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, reach - d, w, axis=1)
         sad = jnp.sum(jnp.abs(dl - shifted), axis=-1)            # (bh, W)
         return jnp.where(u - d >= 0, sad, BIG)
 
     def diag_row(cost: jax.Array, d: jax.Array) -> jax.Array:
-        padded = jnp.pad(cost, ((0, 0), (0, num_disp)), constant_values=BIG)
+        padded = jnp.pad(cost, ((0, 0), (0, reach)), constant_values=BIG)
         return jax.lax.dynamic_slice_in_dim(padded, d, w, axis=1)
 
     return cost_row, diag_row
@@ -364,16 +387,18 @@ def support_match_rows_streaming(
 # --------------------------------------------------------------------------
 # dense_match kernel oracle
 # --------------------------------------------------------------------------
-def _prior_energy(mu: jax.Array, num_disp: int, gamma: float, sigma: float) -> jax.Array:
+def _prior_energy(
+    mu: jax.Array, num_disp: int, gamma: float, sigma: float, disp_min: int = 0
+) -> jax.Array:
     """-log(gamma + exp(-(d-mu)^2 / 2 sigma^2)) for all d: (bh, D, W)."""
-    d = jnp.arange(num_disp, dtype=jnp.float32)[None, :, None]
+    d = (jnp.arange(num_disp, dtype=jnp.float32) + disp_min)[None, :, None]
     diff = d - mu[:, None, :]
     return -jnp.log(gamma + jnp.exp(-(diff * diff) / (2.0 * sigma * sigma)))
 
 
-def _candidate_mask(cands: jax.Array, num_disp: int) -> jax.Array:
-    """cands: (bh, W, C) int32 -> mask (bh, D, W) bool (d in candidate set)."""
-    d = jnp.arange(num_disp)[None, :, None, None]                # (1, D, 1, 1)
+def _candidate_mask(cands: jax.Array, num_disp: int, disp_min: int = 0) -> jax.Array:
+    """cands: (bh, W, C) int32 -> mask (bh, D, W) bool (slot's d in set)."""
+    d = (jnp.arange(num_disp) + disp_min)[None, :, None, None]   # (1, D, 1, 1)
     c = cands[:, None, :, :]                                     # (bh, 1, W, C)
     return jnp.any(d == c, axis=-1)                              # (bh, D, W)
 
@@ -391,23 +416,27 @@ def dense_match_rows_ref(
     gamma: float,
     sigma: float,
     match_texture: int,
+    disp_min: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Dense left AND right disparity rows from ONE cost volume.
 
     Returns (disp_l, disp_r) each (bh, W) float32 with INVALID sentinels.
     The candidate set restriction is a mask over the D axis (compare +
-    reduce), not a gather.
+    reduce), not a gather.  ``disp_min`` anchors the volume's D axis to
+    the candidate value domain ``[disp_min, disp_min + num_disp)`` (what
+    ``candidate_set`` clips to), so every formulation agrees for any
+    offset search range.
     """
-    cv = cost_volume_rows(desc_l, desc_r, num_disp)              # (bh, D, W)
-    cv_r = diagonal_volume(cv)
+    cv = cost_volume_rows(desc_l, desc_r, num_disp, disp_min)    # (bh, D, W)
+    cv_r = diagonal_volume(cv, disp_min)
 
     def one_view(cv_v, mu, cands, tex):
-        mask = _candidate_mask(cands, num_disp)
+        mask = _candidate_mask(cands, num_disp, disp_min)
         e = beta * cv_v.astype(jnp.float32) + _prior_energy(
-            mu, num_disp, gamma, sigma
+            mu, num_disp, gamma, sigma, disp_min
         )
         e = jnp.where(mask & (cv_v < BIG), e, BIGF)
-        best = jnp.argmin(e, axis=1).astype(jnp.float32)         # (bh, W)
+        best = (jnp.argmin(e, axis=1) + disp_min).astype(jnp.float32)
         emin = jnp.min(e, axis=1)
         valid = (emin < BIGF) & (tex >= match_texture)
         return jnp.where(valid, best, INVALID)
@@ -430,6 +459,7 @@ def dense_match_rows_streaming(
     gamma: float,
     sigma: float,
     match_texture: int,
+    disp_min: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming dense matching: one ``lax.scan`` over the disparity axis.
 
@@ -439,11 +469,12 @@ def dense_match_rows_streaming(
     evaluates at slot ``d``, and folds it into running (best energy,
     best d) registers for both views -- the right view via the diagonal
     shift of the same row.  Strict-< updates reproduce ``argmin``'s
-    tie-to-smallest-d exactly.  Live working set: O(W) per row block;
-    jaxpr size: O(1) in ``num_disp``.
+    tie-to-smallest-d exactly.  The sweep covers ``[disp_min,
+    disp_min + num_disp)``, the domain ``candidate_set`` clips to.  Live
+    working set: O(W) per row block; jaxpr size: O(1) in ``num_disp``.
     """
     bh, w, _ = desc_l.shape
-    cost_row, diag_row = _scan_cost_rows(desc_l, desc_r, num_disp)
+    cost_row, diag_row = _scan_cost_rows(desc_l, desc_r, num_disp, disp_min)
 
     def update(state, cost, mu, cands, d):
         best_e, best_d = state
@@ -467,7 +498,7 @@ def dense_match_rows_streaming(
                 jnp.zeros((bh, w), jnp.int32))
 
     ((emin_l, best_l), (emin_r, best_r)), _ = jax.lax.scan(
-        step_fn, (init(), init()), jnp.arange(num_disp)
+        step_fn, (init(), init()), jnp.arange(num_disp) + disp_min
     )
 
     def finish(emin, best, desc):
@@ -585,9 +616,11 @@ def dense_match_rows_windowed_ref(
     the masked D axis (duplicates cannot change a min), and ties resolve
     to the smallest disparity exactly as ``argmin`` over D does.
     """
-    if gather_impl not in GATHER_IMPLS:
+    if gather_impl not in WINDOWED_GATHERS:
         raise ValueError(
-            f"unknown gather_impl {gather_impl!r}; expected one of {GATHER_IMPLS}"
+            f"unknown windowed gather_impl {gather_impl!r}; expected one of "
+            f"{WINDOWED_GATHERS} (the 'stream' formulation is "
+            f"dense_match_rows_stream_ref, which needs no candidate tensor)"
         )
     bh, w, k = desc_l.shape
     dl = desc_l.astype(jnp.int32)
@@ -611,9 +644,14 @@ def dense_match_rows_windowed_ref(
         e = beta * sad.astype(jnp.float32) + prior
         e = jnp.where(in_range, e, BIGF)
         emin = jnp.min(e, axis=-1)                               # (bh, W)
-        # argmin-over-D tie-break: smallest candidate value at the minimum
+        # argmin-over-D tie-break: smallest candidate value at the minimum.
+        # The "not this slot" sentinel must exceed every representable
+        # candidate, i.e. sit past the END of the value domain
+        # [disp_min, disp_min + num_disp) -- a bare num_disp undercuts
+        # in-domain candidates when disp_min > 0.
         best = jnp.min(
-            jnp.where(e == emin[..., None], cands, num_disp), axis=-1
+            jnp.where(e == emin[..., None], cands, disp_min + num_disp),
+            axis=-1,
         ).astype(jnp.float32)
         tex = jnp.sum(jnp.abs(src), axis=-1)
         valid = (emin < BIGF) & (tex >= match_texture)
@@ -625,8 +663,197 @@ def dense_match_rows_windowed_ref(
 
 
 # --------------------------------------------------------------------------
+# streaming dense matching: scan-over-d candidate folding (gather-free)
+# --------------------------------------------------------------------------
+def _scan_sad_rows(
+    desc_l: jax.Array, desc_r: jax.Array, num_disp: int, disp_min: int,
+    precision: str,
+):
+    """SAD-row provider for the streaming dense scan.
+
+    Returns ``(sad_row, shift_left)``: ``sad_row(d)`` is the (bh, W) raw
+    SAD row at traced disparity ``d`` (no BIG sentinels -- validity is a
+    separate boolean so the row fits the narrow accumulator), and
+    ``shift_left(row, d)`` its right-view diagonal ``row[u + d]`` (zero
+    past the edge; the caller masks ``u + d >= W``).
+
+    ``precision`` picks the accumulator: ``"f32"`` widens the int8
+    descriptors to int32 (the reference datapath); ``"int8"`` keeps them
+    narrow and accumulates the SAD in int16 -- EXACT, because the 16-sample
+    SAD is bounded by 16 * 255 = 4080 < 2^15, so the float energies (and
+    hence every output bit) are identical.
+    """
+    if precision not in PRECISION_IMPLS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISION_IMPLS}"
+        )
+    w = desc_l.shape[1]
+    acc = jnp.int16 if precision == "int8" else jnp.int32
+    dl = desc_l.astype(acc)
+    dr = desc_r.astype(acc)
+    reach = num_disp + disp_min       # max column shift the sweep performs
+    dr_pad = jnp.pad(dr, ((0, 0), (reach, 0), (0, 0)))
+
+    def sad_row(d: jax.Array) -> jax.Array:
+        shifted = jax.lax.dynamic_slice_in_dim(dr_pad, reach - d, w, axis=1)
+        return jnp.sum(jnp.abs(dl - shifted), axis=-1, dtype=acc)
+
+    def shift_left(row: jax.Array, d: jax.Array) -> jax.Array:
+        padded = jnp.pad(row, ((0, 0), (0, reach)))
+        return jax.lax.dynamic_slice_in_dim(padded, d, w, axis=1)
+
+    return sad_row, shift_left
+
+
+def upsample_cells(cells: jax.Array, w: int, cell_px: int) -> jax.Array:
+    """(bh, CW) per-grid-cell values -> (bh, W) per-pixel columns.
+
+    Each cell's value is replicated ``cell_px`` columns and the tail
+    (pixels past the last full cell) extends the last cell -- exactly the
+    column mapping of :func:`repro.core.grid_vector.cell_index`, expressed
+    as a static repeat + edge-extend (broadcast/reshape only, no gather).
+    """
+    rep = jnp.repeat(cells, cell_px, axis=1)
+    if rep.shape[1] < w:
+        tail = jnp.broadcast_to(rep[:, -1:], (*rep.shape[:-1], w - rep.shape[1]))
+        rep = jnp.concatenate([rep, tail], axis=1)
+    return rep[:, :w]
+
+
+def dense_match_rows_stream_ref(
+    desc_l: jax.Array,          # (bh, W, 16) int8
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    mu_l: jax.Array,            # (bh, W) float32 plane prior
+    mu_r: jax.Array,            # (bh, W) float32
+    gmask_l: jax.Array,         # (bh, CW, D) bool grid-vector bitmask rows
+    gmask_r: jax.Array,         # (bh, CW, D) bool
+    *,
+    num_disp: int,
+    disp_min: int,
+    plane_radius: int,
+    cell_px: int,
+    beta: float,
+    gamma: float,
+    sigma: float,
+    match_texture: int,
+    precision: str = "f32",
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming gather-free dense matching: one ``lax.scan`` over ``d``.
+
+    The tentpole reformulation of the candidate-window evaluation: instead
+    of gathering each pixel's C candidate descriptors (the windowed
+    ``take``/``onehot``/``slice`` family), every scan step ``d`` computes a
+    single shifted-slice SAD row for ALL pixels -- the right view via the
+    diagonal identity ``CV_R[d, u] = CV[d, u + d]``, a shift of the SAME
+    freshly computed row -- and folds it into running
+    ``(best energy, best d)`` registers only where ``d`` is in the pixel's
+    candidate set.  The per-step membership test is cheap and regular:
+
+    * the grid-vector candidates arrive as a per-cell BITMASK over the
+      disparity axis (``gmask``, one (bh, CW) slice per step upsampled to
+      pixel columns by a static repeat -- see
+      :func:`repro.core.dense.candidate_bitmask_rows`), and
+    * the plane-prior neighbourhood is the band
+      ``clip(round(mu) - R) <= d <= clip(round(mu) + R)`` -- the exact set
+      of clipped values ``candidate_set`` materialises, as two compares --
+      with the prior's energy term computed inline from ``d - mu``.
+
+    No candidate tensor, no gather, no (bh, D, W) volume: the live set is
+    the O(bh x W) registers plus one SAD row, and the jaxpr is O(1) in
+    ``num_disp``.  Strict-< folding reproduces ``argmin``'s
+    tie-to-smallest-d, and every energy is produced by the same float
+    expression as the windowed path, so the result is bitwise identical to
+    :func:`dense_match_rows_windowed_ref` (pinned by
+    tests/test_dense_streaming.py and the golden-frame suite) -- for BOTH
+    ``precision`` datapaths (int16 SAD accumulation is exact; see
+    :func:`_scan_sad_rows`).
+    """
+    bh, w, _ = desc_l.shape
+    sad_row, shift_left = _scan_sad_rows(
+        desc_l, desc_r, num_disp, disp_min, precision
+    )
+    u = jnp.arange(w, dtype=jnp.int32)[None, :]
+    lo_d = float(disp_min)
+    hi_d = float(disp_min + num_disp - 1)
+
+    def prior_band(mu):
+        r = jnp.round(mu)
+        return (jnp.clip(r - plane_radius, lo_d, hi_d),
+                jnp.clip(r + plane_radius, lo_d, hi_d))
+
+    band_l = prior_band(mu_l)
+    band_r = prior_band(mu_r)
+
+    def update(state, sad, valid, mu, band, gcells, d, df):
+        best_e, best_d = state
+        mask = upsample_cells(gcells, w, cell_px)
+        mask = mask | ((df >= band[0]) & (df <= band[1]))
+        diff = df - mu
+        prior = -jnp.log(gamma + jnp.exp(-(diff * diff) / (2.0 * sigma * sigma)))
+        e = beta * sad.astype(jnp.float32) + prior
+        e = jnp.where(mask & valid, e, BIGF)
+        better = e < best_e
+        return jnp.where(better, e, best_e), jnp.where(better, d, best_d)
+
+    def step_fn(carry, i):
+        left, right = carry
+        d = i + disp_min
+        df = d.astype(jnp.float32)
+        sad = sad_row(d)
+        gl = jax.lax.dynamic_index_in_dim(gmask_l, i, axis=2, keepdims=False)
+        gr = jax.lax.dynamic_index_in_dim(gmask_r, i, axis=2, keepdims=False)
+        left = update(left, sad, u >= d, mu_l, band_l, gl, d, df)
+        right = update(
+            right, shift_left(sad, d), u + d < w, mu_r, band_r, gr, d, df
+        )
+        return (left, right), None
+
+    def init():
+        return (jnp.full((bh, w), BIGF, jnp.float32),
+                jnp.zeros((bh, w), jnp.int32))
+
+    ((emin_l, best_l), (emin_r, best_r)), _ = jax.lax.scan(
+        step_fn, (init(), init()), jnp.arange(num_disp),
+        unroll=min(SCAN_UNROLL, num_disp),
+    )
+
+    def finish(emin, best, desc):
+        valid = (emin < BIGF) & (_texture_rows(desc) >= match_texture)
+        return jnp.where(valid, best.astype(jnp.float32), INVALID)
+
+    return finish(emin_l, best_l, desc_l), finish(emin_r, best_r, desc_r)
+
+
+# --------------------------------------------------------------------------
 # median kernel oracle
 # --------------------------------------------------------------------------
+def median9(vals: list) -> jax.Array:
+    """Median of 9 elementwise arrays via Paeth's min/max selection network.
+
+    19 ``minimum``/``maximum`` pairs instead of a general sort -- the same
+    VALUE (hence the same float bits: disparities are non-negative, so no
+    -0.0/+0.0 ambiguity exists) as ``sort(...)[..., 4]``, at a fraction of
+    the cost: XLA lowers a variadic 9-lane sort to a slow generic
+    comparator loop, while the network is 19 vectorised selects.
+    """
+    assert len(vals) == 9
+    v = list(vals)
+
+    def op(i, j):
+        v[i], v[j] = jnp.minimum(v[i], v[j]), jnp.maximum(v[i], v[j])
+
+    # Paeth, "Median Finding on a 3x3 Grid" (Graphics Gems).
+    pairs = (
+        (1, 2), (4, 5), (7, 8), (0, 1), (3, 4), (6, 7),
+        (1, 2), (4, 5), (7, 8), (0, 3), (5, 8), (4, 7),
+        (3, 6), (1, 4), (2, 5), (4, 7), (4, 2), (6, 4),
+        (4, 2),
+    )
+    for i, j in pairs:
+        op(i, j)
+    return v[4]
+
+
 def median3x3_rows_ref(top: jax.Array, mid: jax.Array, bot: jax.Array) -> jax.Array:
     """3x3 valid-aware median for a row block given 3 row-shifted views.
 
@@ -639,9 +866,8 @@ def median3x3_rows_ref(top: jax.Array, mid: jax.Array, bot: jax.Array) -> jax.Ar
     for view in (top, mid, bot):
         for dx in range(3):
             wins.append(view[:, dx : dx + w])
-    win = jnp.stack(wins, axis=-1)                               # (bh, W, 9)
-    win = jnp.where(win == INVALID, centre[..., None], win)
-    med = jnp.sort(win, axis=-1)[..., 4]
+    wins = [jnp.where(win == INVALID, centre, win) for win in wins]
+    med = median9(wins)
     return jnp.where(centre == INVALID, INVALID, med)
 
 

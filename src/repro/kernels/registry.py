@@ -49,7 +49,11 @@ class KernelBackend:
     whether (and how) the backend can run the dense and support stages in
     row tiles / row blocks, and ``dense_match_tiled`` /
     ``support_match_tiled`` -- when declared -- are the tiled entry points
-    (same signatures as the untiled ops plus ``tile_rows=``).  Callers
+    (same signatures as the untiled ops plus ``tile_rows=``).
+    ``dense_match_stream`` is the gather-free streaming dense entry
+    (candidate bitmasks + plane-prior band instead of candidate tensors;
+    see :func:`repro.kernels.ref.dense_match_rows_stream_ref`) -- required
+    whenever the capability's ``default_gather`` is ``"stream"``.  Callers
     pick the path through :class:`~repro.core.tiling.TileCapability`
     rather than hard-coding backend names.
     """
@@ -61,6 +65,8 @@ class KernelBackend:
     median3x3: Callable        # (disp) -> disp
     dense_match_tiled: Optional[Callable] = None   # (..., tile_rows=, **kw)
     support_match_tiled: Optional[Callable] = None  # (..., tile_rows=, **kw)
+    dense_match_stream: Optional[Callable] = None  # (dl, dr, mu_l, mu_r,
+    #                                  gmask_l, gmask_r, tile_rows=, **kw)
     tiling: TileCapability = TileCapability()
     description: str = ""
 
@@ -76,6 +82,11 @@ class KernelBackend:
             raise ValueError(
                 f"backend {self.name!r} declares tiled_support but provides "
                 f"no support_match_tiled callable"
+            )
+        if self.tiling.default_gather == "stream" and self.dense_match_stream is None:
+            raise ValueError(
+                f"backend {self.name!r} defaults to the 'stream' gather but "
+                f"provides no dense_match_stream callable"
             )
 
 

@@ -10,7 +10,9 @@ generalisation of both ideas for many concurrent streams:
   (slots replicate a real frame) and masked at emit time rather than
   stalled, so a single slow stream never blocks the others.  Within a
   resolution bucket, wave order is submission order, so each stream's
-  results come back in the order it submitted them.
+  results come back in the order it submitted them; with ``in_order=True``
+  a per-stream reordering buffer extends that guarantee ACROSS buckets
+  (delivery deferred, wave assembly untouched).
 
 * **Frame-program cache** -- compiled wave programs are cached per
   ``(H, W, batch, backend, params)``; with ``bucket > 1`` resolutions are
@@ -311,6 +313,7 @@ class _Request:
     h: int
     w: int
     t_submit: float
+    seq: int = 0               # per-stream submission sequence (in_order)
 
 
 @dataclasses.dataclass
@@ -348,6 +351,18 @@ class StereoService:
     autobatch:   benchmark candidate wave widths per resolution bucket at
                  warmup() time and use the per-frame-fastest width for that
                  bucket's waves (``batch`` remains the upper bound).
+    in_order:    per-stream in-order completion.  Waves are assembled per
+                 resolution bucket, so by default a later same-bucket
+                 request can complete before an earlier other-bucket one
+                 (documented: A0, B1, A2 -> A0, A2, B1).  With
+                 ``in_order=True`` the emitter holds each finished frame
+                 in a per-stream reordering buffer until every earlier
+                 submission of the SAME stream has been delivered, so each
+                 stream observes strict submission order even across
+                 buckets (A0, B1, A2 on one stream -> A0, B1, A2).  Wave
+                 assembly is unchanged -- only delivery is deferred, so
+                 throughput is untouched and held frames' latency includes
+                 the hold time.
     wave_linger: how long assembly waits to fill a partial wave before
                  dispatching it padded (seconds).
     max_pending: ingest queue bound; submit() blocks beyond this
@@ -357,13 +372,15 @@ class StereoService:
     def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
                  backend: Optional[str] = None, bucket: int = 1,
                  tile: TileArg = None, autobatch: bool = False,
-                 wave_linger: float = 0.002, max_pending: int = 64):
+                 in_order: bool = False, wave_linger: float = 0.002,
+                 max_pending: int = 64):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.params = params
         self.batch = batch
         self.depth = depth
         self.autobatch = autobatch
+        self.in_order = in_order
         self.wave_linger = wave_linger
         self._cache = FrameProgramCache(params, batch, backend, bucket=bucket,
                                         tile=tile)
@@ -385,6 +402,10 @@ class StereoService:
 
         self._slock = threading.Lock()
         self._next_request_id = 0
+        self._stream_seq: dict = collections.defaultdict(int)   # next seq to assign
+        self._reorder: dict = {}       # stream_id -> {seq: (req, disparity)}
+        self._next_emit: dict = collections.defaultdict(int)    # next seq to deliver
+        self._lost_seqs: dict = collections.defaultdict(set)    # never deliverable
         self._submitted = 0
         self._completed = 0
         self._dropped = 0
@@ -418,6 +439,39 @@ class StereoService:
                 except queue.Empty:
                     break
         with self._slock:
+            # Frames stranded in the reordering buffer by an aborted stop
+            # lost their results and can never be delivered; likewise every
+            # assigned seq that is neither already delivered nor still
+            # waiting in the ingest queue (ingest survivors ARE served
+            # after restart, so their seqs stay live).  Mark the dead seqs
+            # so the in-order flush skips over them instead of holding all
+            # later frames forever.
+            self._reorder.clear()
+            with self._ingest.mutex:
+                surviving = {
+                    (r.stream_id, r.seq) for r in list(self._ingest.queue)
+                }
+            for sid, assigned in self._stream_seq.items():
+                for seq in range(self._next_emit[sid], assigned):
+                    if (sid, seq) not in surviving:
+                        self._lost_seqs[sid].add(seq)
+            # Compact quiescent streams (everything assigned was delivered
+            # or marked lost, nothing surviving in ingest): their counters
+            # may safely restart from zero, so a long-lived in_order
+            # service with churning stream ids does not grow per-stream
+            # state forever.  Threads are stopped here, so this is the one
+            # place the pruning cannot race the emitter.
+            live = {sid for sid, _ in surviving}
+            for sid in list(self._stream_seq):
+                quiescent = (
+                    sid not in live
+                    and self._next_emit[sid] + len(self._lost_seqs[sid])
+                    >= self._stream_seq[sid]
+                )
+                if quiescent:
+                    self._stream_seq.pop(sid, None)
+                    self._next_emit.pop(sid, None)
+                    self._lost_seqs.pop(sid, None)
             self._dropped = max(
                 0, self._submitted - self._completed - self._ingest.qsize()
             )
@@ -519,12 +573,19 @@ class StereoService:
         with self._slock:
             rid = self._next_request_id
             self._next_request_id += 1
+            # Sequence numbers exist only for the in_order reordering
+            # buffer; without it, skip the per-stream dict so a service fed
+            # fresh stream ids per client never accumulates bookkeeping.
+            seq = 0
+            if self.in_order:
+                seq = self._stream_seq[stream_id]
+                self._stream_seq[stream_id] = seq + 1
             if self._t_first_submit is None:
                 self._t_first_submit = now
         req = _Request(
             request_id=rid, stream_id=stream_id, frame_id=frame_id,
             left=left, right=right, h=left.shape[0], w=left.shape[1],
-            t_submit=now,
+            t_submit=now, seq=seq,
         )
         t0 = time.monotonic()
         while True:     # abort-aware put: never deadlock on a dead service
@@ -756,18 +817,43 @@ class StereoService:
                 self._done.set()
                 return
             disp = np.asarray(wave.disp)       # device -> host sync point
-            now = time.monotonic()
             for slot, req in enumerate(wave.requests):
                 out = np.ascontiguousarray(disp[slot, : req.h, : req.w])
-                lat = now - req.t_submit
-                with self._slock:
-                    self._completed += 1
-                    self._latencies.append(lat)
-                    self._lat_sum += lat
-                    self._lat_max = max(self._lat_max, lat)
-                    self._t_last_emit = now
-                self._out.put(CompletedFrame(
-                    request_id=req.request_id, stream_id=req.stream_id,
-                    frame_id=req.frame_id, disparity=out, latency_s=lat,
-                ))
+                if not self.in_order:
+                    self._deliver(req, out)
+                    continue
+                # Per-stream reordering buffer: hold this frame until every
+                # earlier submission of the same stream has been delivered,
+                # then flush the now-consecutive run.  Latency is measured
+                # at delivery, so held frames honestly include hold time.
+                sid = req.stream_id
+                self._reorder.setdefault(sid, {})[req.seq] = (req, out)
+                pending = self._reorder[sid]
+                while True:
+                    nxt = self._next_emit[sid]
+                    if nxt in self._lost_seqs[sid]:
+                        # known-dead seq (dropped by an aborted stop):
+                        # skip it so survivors behind it still deliver
+                        self._lost_seqs[sid].discard(nxt)
+                        self._next_emit[sid] = nxt + 1
+                    elif nxt in pending:
+                        r, o = pending.pop(nxt)
+                        self._next_emit[sid] = nxt + 1
+                        self._deliver(r, o)
+                    else:
+                        break
             wave.disp = None
+
+    def _deliver(self, req: _Request, out: np.ndarray) -> None:
+        now = time.monotonic()
+        lat = now - req.t_submit
+        with self._slock:
+            self._completed += 1
+            self._latencies.append(lat)
+            self._lat_sum += lat
+            self._lat_max = max(self._lat_max, lat)
+            self._t_last_emit = now
+        self._out.put(CompletedFrame(
+            request_id=req.request_id, stream_id=req.stream_id,
+            frame_id=req.frame_id, disparity=out, latency_s=lat,
+        ))

@@ -1,0 +1,312 @@
+"""Streaming gather-free dense matching: bitwise identity against the
+windowed (materialised candidate-window) oracle across backends, disparity
+ranges (including ``disp_min > 0``), odd widths, tile heights, partial last
+tiles, and both SAD precisions -- plus the jaxpr-size gate pinning the
+O(1)-in-D property, mirroring tests/test_support_streaming.py.
+
+The streaming scan (repro.kernels.ref.dense_match_rows_stream_ref, routed
+via ``TileSpec(gather="stream")``) folds the candidate set per step from
+the grid-vector bitmask and the plane-prior band instead of gathering
+per-pixel candidate descriptors; these tests pin it bit-for-bit against
+``dense_match_rows_windowed_ref`` (the ``take`` formulation), which is
+what makes the gather-free form a pure lowering/locality decision.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs.elas_stereo import SYNTH
+from repro.core import pipeline
+from repro.core.dense import candidate_bitmask_rows, dense_match_stream_xla
+from repro.core.tiling import PRECISION_IMPLS, TileSpec
+from repro.data.stereo import synthetic_stereo_pair
+from repro.kernels import ref
+from repro.kernels.registry import get_backend
+
+P = SYNTH.params
+
+
+def _params(num_disp: int, disp_min: int = 0):
+    return dataclasses.replace(
+        P, disp_min=disp_min, disp_max=disp_min + num_disp - 1
+    )
+
+
+def _scene(h, w, seed):
+    il, ir, _ = synthetic_stereo_pair(height=h, width=w, d_max=24, seed=seed)
+    return jnp.asarray(il, jnp.float32), jnp.asarray(ir, jnp.float32)
+
+
+def _dense_stage_maps(il, ir, p, backend, tile):
+    """Full dense stage through the public pipeline (support -> interp ->
+    dense) -- exercises the real bitmask/candidate routing."""
+    dl, dr, sup = pipeline.ielas_support_stage(il, ir, p, backend="ref")
+    sup = pipeline.ielas_interpolate_stage(sup, p)
+    return np.asarray(pipeline.ielas_dense_stage(
+        dl, dr, sup, p, backend=backend, tile=tile
+    ))
+
+
+class TestStreamEqualsWindowedOracle:
+    """gather="stream" == gather="take" bit for bit, across the lattice."""
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("num_disp", [16, 64])
+    def test_stream_bitwise_vs_take(self, backend, num_disp):
+        p = _params(num_disp)
+        il, ir = _scene(57, 83, seed=num_disp)
+        want = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=16, gather="take")
+        )
+        got = _dense_stage_maps(
+            il, ir, p, backend, TileSpec(rows=16, gather="stream")
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("disp_min", [3, 8])
+    def test_stream_bitwise_at_offset_range(self, backend, disp_min):
+        """disp_min > 0: the scan must sweep [disp_min, disp_min + D), not
+        [0, D), and tie-breaks must still pick the smallest candidate."""
+        p = _params(32, disp_min=disp_min)
+        il, ir = _scene(57, 83, seed=disp_min)
+        want = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=16, gather="take")
+        )
+        got = _dense_stage_maps(
+            il, ir, p, backend, TileSpec(rows=16, gather="stream")
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("precision", PRECISION_IMPLS)
+    def test_precisions_bitwise(self, precision):
+        """int8/int16 SAD accumulation is exact (16 * 255 < 2^15), so both
+        precisions produce identical bits."""
+        p = _params(64, disp_min=2)
+        il, ir = _scene(45, 67, seed=7)
+        want = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=16, gather="take")
+        )
+        got = _dense_stage_maps(
+            il, ir, p, "ref",
+            TileSpec(rows=16, gather="stream", precision=precision),
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @given(
+        num_disp=st.sampled_from([16, 64]),
+        disp_min=st.sampled_from([0, 2, 5]),
+        rows=st.integers(1, 24),
+        h=st.integers(41, 64),
+        w=st.integers(60, 90),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_property_stream_bitwise(self, num_disp, disp_min, rows, h, w,
+                                     seed):
+        """Odd sizes x tile heights x partial last tiles x offset ranges:
+        the gather-free scan never changes a single output bit."""
+        p = _params(num_disp, disp_min=disp_min)
+        il, ir = _scene(h, w, seed)
+        want = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=16, gather="take")
+        )
+        got = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=rows, gather="stream")
+        )
+        np.testing.assert_array_equal(got, want)
+
+    def test_untiled_agrees_at_offset_range(self):
+        """The untiled cand-tensor streaming path now sweeps the same
+        [disp_min, disp_min + D) domain as the windowed family, so the
+        whole lattice agrees even at disp_min > 0 (it previously scanned
+        [0, D) and silently ignored high candidates)."""
+        from repro.core.tiling import UNTILED
+
+        p = _params(32, disp_min=5)
+        il, ir = _scene(57, 83, seed=3)
+        want = _dense_stage_maps(
+            il, ir, p, "ref", TileSpec(rows=16, gather="take")
+        )
+        got = _dense_stage_maps(il, ir, p, "ref", UNTILED)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestBatchedStream:
+    def test_batched_stream_equals_per_frame(self):
+        p = _params(32)
+        scenes = [_scene(45, 67, seed=s) for s in range(3)]
+        tile = TileSpec(rows=8, gather="stream")
+        singles = [
+            _dense_stage_maps(il, ir, p, "ref", tile) for il, ir in scenes
+        ]
+        left = jnp.stack([s[0] for s in scenes])
+        right = jnp.stack([s[1] for s in scenes])
+        dl, dr, sup = pipeline.ielas_support_stage_batched(
+            left, right, p, backend="ref"
+        )
+        sup = jax.vmap(lambda s: pipeline.ielas_interpolate_stage(s, p))(sup)
+        out = np.asarray(pipeline.ielas_dense_stage_batched(
+            dl, dr, sup, p, backend="ref", tile=tile
+        ))
+        for i, want in enumerate(singles):
+            np.testing.assert_array_equal(out[i], want)
+
+
+class TestCandidateBitmask:
+    def test_bitmask_matches_candidate_set_membership(self):
+        """bit[v, cx, i] must equal 'disp_min + i in the grid half of
+        candidate_set' for the pixel column range the cell covers."""
+        from repro.core.dense import candidate_set
+        from repro.core.grid_vector import cell_index
+
+        p = _params(16, disp_min=2)
+        h, w = 47, 66
+        rng = np.random.default_rng(0)
+        grid_vec = jnp.asarray(
+            rng.uniform(-3, 25, (h // p.grid_size, w // p.grid_size,
+                                 p.grid_vector_k)).astype(np.float32)
+        )
+        mask = np.asarray(candidate_bitmask_rows(grid_vec, p, h))
+        assert mask.shape == (h, w // p.grid_size, p.num_disp)
+        # reference membership via the materialised candidate tensor with
+        # the prior half disabled (mu far outside so its band saturates at
+        # the clip edge -- remove those values from the comparison).
+        cy, cx = cell_index(h, w, p)
+        cells = np.asarray(
+            jnp.clip(jnp.round(grid_vec), p.disp_min, p.disp_max)
+        ).astype(np.int64)
+        for v in (0, 1, h // 2, h - 1):
+            for u in (0, 1, w // 2, w - 1):
+                vals = set(cells[int(cy[v]), int(cx[u])].tolist())
+                got = {
+                    p.disp_min + i
+                    for i in range(p.num_disp)
+                    if mask[v, int(cx[u]), i]
+                }
+                assert got == vals, (v, u)
+        # and the full candidate_set equals bitmask | prior band per pixel
+        mu = jnp.asarray(rng.uniform(0, 15, (h, w)).astype(np.float32))
+        cands = np.asarray(candidate_set(mu, grid_vec, p))
+        r = np.asarray(jnp.round(mu))
+        lo = np.clip(r - p.plane_radius, p.disp_min, p.disp_max)
+        hi = np.clip(r + p.plane_radius, p.disp_min, p.disp_max)
+        for v in (0, h - 1):
+            for u in (0, w - 1):
+                want = set(cands[v, u].tolist())
+                got = {
+                    p.disp_min + i
+                    for i in range(p.num_disp)
+                    if mask[v, int(cx[u]), i]
+                } | set(range(int(lo[v, u]), int(hi[v, u]) + 1))
+                assert got == want, (v, u)
+
+
+def _count_eqns(jaxpr) -> int:
+    """Total equation count, recursing into scan/cond/pjit sub-jaxprs."""
+    total = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else [val]
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    total += _count_eqns(inner)
+                elif hasattr(v, "eqns"):
+                    total += _count_eqns(v)
+    return total
+
+
+class TestJaxprConstantInD:
+    """The streaming dense path must not re-grow with num_disp: the
+    windowed take/onehot formulations emit O(C) gather work but the scan
+    emits O(1) equations in D -- same gate as the support stage."""
+
+    @staticmethod
+    def _stream_eqns(num_disp: int, disp_min: int = 0) -> int:
+        p = _params(num_disp, disp_min=disp_min)
+        bh, w = 3, 44
+        rng = np.random.default_rng(0)
+        desc = jnp.asarray(
+            rng.integers(-40, 40, (bh, w, 16)).astype(np.int8)
+        )
+        mu = jnp.zeros((bh, w), jnp.float32)
+        gmask = jnp.zeros((bh, w // p.grid_size, p.num_disp), bool)
+
+        fn = functools.partial(
+            ref.dense_match_rows_stream_ref,
+            num_disp=p.num_disp, disp_min=p.disp_min,
+            plane_radius=p.plane_radius, cell_px=p.grid_size,
+            beta=p.beta, gamma=p.gamma, sigma=p.sigma,
+            match_texture=p.match_texture,
+        )
+        return _count_eqns(
+            jax.make_jaxpr(fn)(desc, desc, mu, mu, gmask, gmask).jaxpr
+        )
+
+    def test_stream_jaxpr_constant_in_num_disp(self):
+        counts = {d: self._stream_eqns(d) for d in (8, 16, 64)}
+        assert len(set(counts.values())) == 1, counts
+
+    def test_stream_jaxpr_constant_at_offset_range(self):
+        assert self._stream_eqns(16, disp_min=4) == self._stream_eqns(
+            64, disp_min=4
+        )
+
+    def test_tiled_stream_jaxpr_constant_in_num_disp(self):
+        def eqns(num_disp):
+            p = _params(num_disp)
+            h, w = 44, 44
+            rng = np.random.default_rng(1)
+            desc = jnp.asarray(
+                rng.integers(-40, 40, (h, w, 16)).astype(np.int8)
+            )
+            mu = jnp.zeros((h, w), jnp.float32)
+            gmask = jnp.zeros((h, w // p.grid_size, p.num_disp), bool)
+            fn = functools.partial(
+                dense_match_stream_xla,
+                num_disp=p.num_disp, disp_min=p.disp_min,
+                plane_radius=p.plane_radius, cell_px=p.grid_size,
+                beta=p.beta, gamma=p.gamma, sigma=p.sigma,
+                match_texture=p.match_texture, tile_rows=8,
+            )
+            return _count_eqns(
+                jax.make_jaxpr(fn)(desc, desc, mu, mu, gmask, gmask).jaxpr
+            )
+
+        assert eqns(16) == eqns(64)
+
+
+class TestStreamDispatch:
+    def test_builtin_backends_declare_stream_entry(self):
+        for name in ("ref", "pallas", "pallas_tpu"):
+            be = get_backend(name)
+            assert be.tiling.default_gather == "stream"
+            assert callable(be.dense_match_stream)
+
+    def test_default_tile_carries_precision(self):
+        """Every built-in backend defaults to the int8 SAD datapath (the
+        int16 accumulation is exact, so this is purely a speed choice)."""
+        for name in ("ref", "pallas", "pallas_tpu"):
+            assert get_backend(name).tiling.default_tile().precision == "int8"
+
+    def test_tilespec_rejects_unknown_precision(self):
+        with pytest.raises(ValueError, match="precision"):
+            TileSpec(rows=4, precision="fp4")
+
+    def test_windowed_ref_rejects_stream_gather(self):
+        desc = jnp.zeros((1, 40, 16), jnp.int8)
+        mu = jnp.zeros((1, 40), jnp.float32)
+        cands = jnp.zeros((1, 40, 3), jnp.int32)
+        with pytest.raises(ValueError, match="stream"):
+            ref.dense_match_rows_windowed_ref(
+                desc, desc, mu, mu, cands, cands,
+                num_disp=8, beta=0.02, gamma=3.0, sigma=1.0,
+                match_texture=1, gather_impl="stream",
+            )

@@ -8,7 +8,9 @@ every point of the dispatch lattice:
     backends (ref, pallas[, pallas_tpu on TPU])
   x tile specs (explicit UNTILED, the resolved device default, and a
     concrete odd-block TileSpec)
-  x candidate-gather formulations (take / onehot / slice)
+  x candidate formulations (take / onehot / slice gathers + the
+    gather-free stream scan)
+  x SAD precisions on the stream path (f32 / int8)
   x unbatched single-frame and batched wave-shaped stage paths
 
 so ANY numeric drift anywhere in the stack -- a kernel edit, a gather
@@ -82,11 +84,17 @@ def _cpu_backends():
 
 def _tile_cases():
     """(id, tile) pairs covering the dispatch lattice: the explicit
-    untiled path, the resolved device default (``None``), and a concrete
-    odd-block spec in each gather formulation."""
+    untiled path, the resolved device default (``None``), a concrete
+    odd-block spec in each candidate formulation, and both SAD precisions
+    of the streaming scan (int8 accumulation is exact, so it must land on
+    the same digest)."""
     cases = [("untiled", UNTILED), ("default", None)]
     for g in GATHER_IMPLS:
         cases.append((f"rows16-{g}", TileSpec(rows=16, support_rows=3, gather=g)))
+    cases.append((
+        "rows16-stream-int8",
+        TileSpec(rows=16, support_rows=3, gather="stream", precision="int8"),
+    ))
     return cases
 
 
@@ -202,11 +210,18 @@ class TestDispatchResolution:
         with pytest.raises(ValueError, match="UNTILED|untiled"):
             resolve_dispatch("ref", "bogus")
 
-    def test_pallas_default_gather_is_mosaic_ready(self):
+    def test_default_gather_is_mosaic_ready_stream(self):
+        """Every built-in backend defaults to the gather-free streaming
+        scan (slices + compares only -- nothing Mosaic cannot lower); the
+        pallas backends additionally default to the int8 SAD datapath."""
+        for name in ("ref", "pallas", "pallas_tpu"):
+            cap = get_backend(name).tiling
+            assert cap.default_gather == "stream"
+            assert cap.default_tile().gather == "stream"
         for name in ("pallas", "pallas_tpu"):
             cap = get_backend(name).tiling
-            assert cap.default_gather == "onehot"
-            assert cap.default_tile().gather == "onehot"
+            assert cap.default_precision == "int8"
+            assert cap.default_tile().precision == "int8"
 
     def test_tilespec_rejects_unknown_gather(self):
         with pytest.raises(ValueError, match="gather"):
