@@ -72,6 +72,7 @@ def row(name: str, us_per_call: float, derived: str) -> str:
 # JSON export + CI regression gate
 # ---------------------------------------------------------------------------
 _FPS_RE = re.compile(r"(?:^|\s)fps=([0-9.]+)")
+_P99_RE = re.compile(r"(?:^|\s)p99_ms=([0-9.]+)")
 
 
 def parse_fps(derived: str) -> Optional[float]:
@@ -80,8 +81,15 @@ def parse_fps(derived: str) -> Optional[float]:
     return float(m.group(1)) if m else None
 
 
+def parse_p99_ms(derived: str) -> Optional[float]:
+    """The ``p99_ms=...`` figure embedded in a derived string, if any."""
+    m = _P99_RE.search(derived)
+    return float(m.group(1)) if m else None
+
+
 def rows_to_records(lines: Sequence[str]) -> dict:
-    """``name,us,derived`` CSV lines -> {name: {us_per_call, derived, fps}}."""
+    """``name,us,derived`` CSV lines -> {name: {us_per_call, derived, fps,
+    p99_ms}} (the latter two only when the derived string carries them)."""
     records = {}
     for line in lines:
         name, us, derived = line.split(",", 2)
@@ -89,6 +97,9 @@ def rows_to_records(lines: Sequence[str]) -> dict:
         fps = parse_fps(derived)
         if fps is not None:
             rec["fps"] = fps
+        p99 = parse_p99_ms(derived)
+        if p99 is not None:
+            rec["p99_ms"] = p99
         records[name] = rec
     return records
 
@@ -107,22 +118,45 @@ def load_baseline(path: str) -> dict:
 
 def check_against_baseline(records: dict, baseline: dict,
                            tolerance: float = 0.30) -> list[str]:
-    """Regression check: every fps-bearing baseline row must be present and
-    within ``tolerance`` fractional slowdown.  Returns failure messages
-    (empty == pass)."""
+    """Regression check against the checked-in baseline; returns failure
+    messages (empty == pass).
+
+    Two gated metrics, opposite polarities:
+
+    * ``fps`` rows (higher is better) fail when the current figure drops
+      more than ``tolerance`` fractionally below the baseline;
+    * ``p99_ms`` rows (lower is better -- tail latency under the overload
+      scenario) fail when the current figure rises more than ``tolerance``
+      fractionally above it.
+    """
     failures = []
     for name, base in sorted(baseline.get("rows", {}).items()):
         base_fps = base.get("fps")
-        if base_fps is None:
+        base_p99 = base.get("p99_ms")
+        if base_fps is None and base_p99 is None:
             continue
         rec = records.get(name)
-        if rec is None or rec.get("fps") is None:
+        if rec is None:
             failures.append(f"{name}: missing from current run")
             continue
-        floor = base_fps * (1.0 - tolerance)
-        if rec["fps"] < floor:
-            failures.append(
-                f"{name}: fps {rec['fps']:.2f} < {floor:.2f} "
-                f"(baseline {base_fps:.2f}, tolerance {tolerance:.0%})"
-            )
+        if base_fps is not None:
+            if rec.get("fps") is None:
+                failures.append(f"{name}: missing fps in current run")
+            else:
+                floor = base_fps * (1.0 - tolerance)
+                if rec["fps"] < floor:
+                    failures.append(
+                        f"{name}: fps {rec['fps']:.2f} < {floor:.2f} "
+                        f"(baseline {base_fps:.2f}, tolerance {tolerance:.0%})"
+                    )
+        if base_p99 is not None:
+            if rec.get("p99_ms") is None:
+                failures.append(f"{name}: missing p99_ms in current run")
+            else:
+                ceiling = base_p99 * (1.0 + tolerance)
+                if rec["p99_ms"] > ceiling:
+                    failures.append(
+                        f"{name}: p99_ms {rec['p99_ms']:.1f} > {ceiling:.1f} "
+                        f"(baseline {base_p99:.1f}, tolerance {tolerance:.0%})"
+                    )
     return failures

@@ -52,6 +52,7 @@ untiled path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -91,7 +92,25 @@ def _dense_priors(
     return mu_l, mu_r, gv_l, gv_r
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+def _narrow_band(p: ElasParams, band_radius: Optional[int]) -> ElasParams:
+    """Override the plane-prior band half-width (``plane_radius``).
+
+    The streaming dense scan folds candidates from the grid-vector bitmask
+    OR the band ``|d - round(mu)| <= plane_radius``; its cost is linear in
+    band width, so a narrower band is the serving engine's degraded-mode
+    quality-for-latency knob (see ``StereoService(degrade_watermark=...)``).
+    ``None`` leaves ``p`` untouched -- the default, conformance-pinned path.
+    """
+    if band_radius is None:
+        return p
+    if band_radius < 0:
+        raise ValueError(f"band_radius must be >= 0, got {band_radius}")
+    return dataclasses.replace(p, plane_radius=int(band_radius))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "backend", "tile", "band_radius")
+)
 def ielas_dense_stage(
     dl: jax.Array,
     dr: jax.Array,
@@ -99,14 +118,18 @@ def ielas_dense_stage(
     p: ElasParams,
     backend: Optional[str] = None,
     tile: TileArg = None,
+    band_radius: Optional[int] = None,
 ) -> jax.Array:
     """Dense disparity for both views + post-processing -> final left map.
 
     One jitted program (like its batched sibling): priors, grid-vector
     bitmasks, the streaming match, and post-processing fuse into a single
     XLA computation instead of a chain of separately dispatched sub-jits.
+    ``band_radius`` (jit-static) narrows the plane-prior candidate band --
+    the serving engine's degraded-mode knob (see :func:`_narrow_band`).
     """
     backend, tile = resolve_dispatch(backend, tile)
+    p = _narrow_band(p, band_radius)
     h, w = dl.shape[:2]
     mu_l, mu_r, gv_l, gv_r = _dense_priors(support_left, h, w, p)
     disp_l, disp_r = dense_both_views(
@@ -115,7 +138,9 @@ def ielas_dense_stage(
     return postprocess(disp_l, disp_r, p)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
+@functools.partial(
+    jax.jit, static_argnames=("p", "backend", "tile", "band_radius")
+)
 def ielas_dense_stage_batched(
     dl: jax.Array,             # (B, H, W, 16)
     dr: jax.Array,
@@ -123,6 +148,7 @@ def ielas_dense_stage_batched(
     p: ElasParams,
     backend: Optional[str] = None,
     tile: TileArg = None,
+    band_radius: Optional[int] = None,
 ) -> jax.Array:
     """Wave-shaped dense stage: (B, H, W) final left maps.
 
@@ -131,9 +157,12 @@ def ielas_dense_stage_batched(
     :func:`~repro.core.dense.dense_both_views_batched`, which with a
     ``tile`` walks the flat batch x row-tile grid one tile at a time
     instead of materialising batch-wide volumes.  Bitwise identical to
-    vmapping :func:`ielas_dense_stage` over the wave.
+    vmapping :func:`ielas_dense_stage` over the wave.  ``band_radius``
+    (jit-static) narrows the plane-prior candidate band for the whole
+    wave -- the serving engine's degraded-mode knob.
     """
     backend, tile = resolve_dispatch(backend, tile)
+    p = _narrow_band(p, band_radius)
     h, w = dl.shape[1:3]
     mu_l, mu_r, gv_l, gv_r = jax.vmap(
         lambda s: _dense_priors(s, h, w, p)

@@ -5,7 +5,11 @@ Three mechanisms (each unit-tested with injected failures):
 * ``HeartbeatMonitor`` -- per-host step heartbeats; hosts whose last beat is
   older than ``timeout`` are dead, hosts slower than ``straggler_factor`` x
   median step time are stragglers.  At scale the scheduler uses this to
-  evict/replace nodes before they stall the collective.
+  evict/replace nodes before they stall the collective.  The same monitor
+  doubles as stage-thread liveness for the stereo serving engine
+  (:mod:`repro.serving.stereo_service`): each stage loop beats once per
+  poll with its wave count as the step, so a wedged stage shows up as
+  dead and a slow one as a straggler in ``StereoService.stats()``.
 * ``run_with_recovery`` -- wraps the train loop: on failure, restores the
   latest checkpoint and replays.  Batches are a pure function of step
   (repro.data.tokens), so recovery is bitwise-deterministic.
@@ -53,7 +57,11 @@ class HeartbeatMonitor:
         }
 
     def beat(self, host: str, step: int) -> None:
-        st = self.hosts[host]
+        st = self.hosts.get(host)
+        if st is None:      # late registration (e.g. a restarted stage thread)
+            st = self.hosts[host] = HostStatus(
+                last_beat=self.clock(), last_step=-1, step_times=[]
+            )
         now = self.clock()
         if st.last_step >= 0 and step > st.last_step:
             st.step_times.append((now - st.last_beat) / (step - st.last_step))
@@ -80,6 +88,12 @@ class HeartbeatMonitor:
         return [
             h for h, t in times.items() if t > self.straggler_factor * median
         ]
+
+    def is_alive(self, host: str) -> bool:
+        """Whether ``host``'s last beat is within ``timeout`` (unknown
+        hosts report dead -- they have never beaten)."""
+        st = self.hosts.get(host)
+        return st is not None and self.clock() - st.last_beat <= self.timeout
 
     def healthy_hosts(self) -> list[str]:
         bad = set(self.dead_hosts())

@@ -1,4 +1,10 @@
+from repro.serving.admission import AdmissionController  # noqa: F401
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.faults import (  # noqa: F401
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+)
 from repro.serving.stereo_service import (  # noqa: F401
     CompletedFrame,
     FrameProgramCache,

@@ -1,0 +1,103 @@
+"""Deterministic fault injection for the stereo serving engine.
+
+Robustness claims about a threaded pipeline are worthless unless every
+failure mode can be reproduced on demand.  A :class:`FaultPlan` is a list
+of :class:`FaultSpec` triggers handed to ``StereoService(fault_plan=...)``;
+the stage loops call :meth:`FaultPlan.check` immediately before executing a
+wave's program, and the plan deterministically raises (or delays) for the
+chosen stage / wave index / request id.  ``tests/test_serving_faults.py``
+uses this to prove the engine's containment properties: a wave-level fault
+fails only its own frames, one bounded retry recovers transients, a poison
+frame is quarantined without killing its wave-mates, and repeated systemic
+failure aborts the engine cleanly.
+
+Trigger matching (all conditions AND together):
+
+* ``stage``       -- which stage loop fires ("support" | "dense" | "emit").
+* ``wave``        -- global wave-assembly index, or None for every wave.
+* ``request_id``  -- fire only when this request rides the wave (a *poison
+  frame*: it re-fires on the single-frame retry wave, so the frame fails
+  terminally while its wave-mates recover).
+* ``times``       -- total number of firings, or None for unlimited.
+  ``times=1`` models a *transient* fault: the batched attempt fails, the
+  retry passes.
+
+``kind="delay"`` sleeps ``delay_s`` instead of raising -- used to build
+queue pressure for admission-control / degraded-mode tests without any
+frame actually failing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+
+class FaultInjected(RuntimeError):
+    """Raised by :meth:`FaultPlan.check` when a ``raise``-kind spec fires."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One deterministic trigger inside a :class:`FaultPlan`."""
+
+    stage: str                          # "support" | "dense" | "emit"
+    wave: Optional[int] = None          # global wave index; None == any wave
+    request_id: Optional[int] = None    # poison frame; None == any request
+    kind: str = "raise"                 # "raise" | "delay"
+    times: Optional[int] = 1            # firings before the spec goes quiet;
+                                        # None == unlimited (persistent fault)
+    delay_s: float = 0.0                # sleep length for kind="delay"
+    message: str = "injected fault"
+
+    def __post_init__(self) -> None:
+        if self.stage not in ("support", "dense", "emit"):
+            raise ValueError(f"unknown stage {self.stage!r}")
+        if self.kind not in ("raise", "delay"):
+            raise ValueError(f"unknown kind {self.kind!r}")
+        if self.times is not None and self.times < 1:
+            raise ValueError(f"times must be >= 1 or None, got {self.times}")
+
+
+class FaultPlan:
+    """A deterministic set of :class:`FaultSpec` triggers (thread-safe)."""
+
+    def __init__(self, specs: Sequence[FaultSpec]):
+        self.specs = list(specs)
+        self._fired = [0] * len(self.specs)
+        self._lock = threading.Lock()
+
+    def fired(self, index: int) -> int:
+        """How many times spec ``index`` has fired so far."""
+        with self._lock:
+            return self._fired[index]
+
+    def check(self, stage: str, wave_index: int,
+              request_ids: Sequence[int]) -> None:
+        """Fire every matching spec; raises on the first ``raise`` match.
+
+        Called by the stage loops with the wave's global assembly index and
+        the request ids riding it (a single-frame retry wave passes just
+        the one id, which is what lets ``request_id`` specs poison a frame
+        through its retry while wave-mates recover).
+        """
+        rids = set(request_ids)
+        for i, spec in enumerate(self.specs):
+            if spec.stage != stage:
+                continue
+            if spec.wave is not None and spec.wave != wave_index:
+                continue
+            if spec.request_id is not None and spec.request_id not in rids:
+                continue
+            with self._lock:
+                if spec.times is not None and self._fired[i] >= spec.times:
+                    continue
+                self._fired[i] += 1
+            if spec.kind == "delay":
+                time.sleep(spec.delay_s)
+                continue
+            raise FaultInjected(
+                f"{spec.message} (stage={stage}, wave={wave_index}, "
+                f"requests={sorted(rids)})"
+            )

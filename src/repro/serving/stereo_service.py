@@ -42,12 +42,54 @@ generalisation of both ideas for many concurrent streams:
   boundary as the paper's Fig. 3 subsystems.
 
 * **Accounting** -- per-request latency, wave occupancy, backpressure time
-  spent blocked in ``submit()``, and program-cache counters, snapshotted by
+  spent blocked in ``submit()``, program-cache counters, admission /
+  containment counters and per-stage liveness, snapshotted by
   :meth:`StereoService.stats`.
 
 The split wave programs produce *bitwise identical* output to the fused
 single-frame :func:`~repro.core.pipeline.ielas_disparity` program (pinned by
 tests/test_stereo_serving.py), so batching is purely a throughput decision.
+
+Failure model
+-------------
+The paper's consumers (robot navigation, autonomous vehicles) are
+hard-real-time: the engine must keep producing frames under transient
+faults and load spikes instead of dying on the first exception.  The
+containment rules (proved by ``tests/test_serving_faults.py`` via the
+:mod:`repro.serving.faults` injection harness):
+
+* **What fails a frame** -- an exception while executing a wave's support
+  or dense program fails *only that wave's frames*: the wave is retried
+  once as single-frame fallback waves (batch-1 programs, compiled on the
+  cold path), so a transient fault recovers completely and a *poison
+  frame* -- one whose retry fails again -- is quarantined alone while its
+  wave-mates recover.  Failed frames are delivered on the normal result
+  path as :class:`CompletedFrame` with ``error`` set (``disparity=None``);
+  ``collect`` / ``results`` / ``run_stream`` surface them, and with
+  ``in_order=True`` they advance the stream's sequence like any other
+  delivery, so later frames are never held behind a dead one.  Requests
+  whose ``deadline`` passed before compute are shed at wave assembly the
+  same way (error frames, ``shed``/``expired`` counters) without spending
+  device time.
+
+* **What fails the engine** -- only *systemic* failure: ``max_wave_failures``
+  CONSECUTIVE waves failing completely (no slot recovered) aborts the
+  engine, stores the error, and every later ``submit``/``stop`` re-raises
+  it.  Any recovered slot resets the count.
+
+* **Degraded mode** -- with ``degrade_watermark`` set, an assembly backlog
+  past the watermark switches new waves to a dense program with the
+  plane-prior band narrowed to ``degraded_band`` (the streaming scan's
+  cost is linear in band width -- a real quality-for-latency knob);
+  full quality returns once the backlog falls below ``clear_watermark``
+  (hysteresis).  The non-degraded path is bitwise untouched -- golden-frame
+  conformance is pinned against exactly that path.
+
+* **Liveness** -- every stage thread beats a
+  :class:`~repro.runtime.fault_tolerance.HeartbeatMonitor` once per poll
+  (step = waves processed), so ``stats()`` reports per-stage liveness and
+  stragglers, and ``stop(drain=True)`` detects a dead/aborted pipeline
+  promptly instead of sleeping out its timeout.
 """
 from __future__ import annotations
 
@@ -57,7 +99,7 @@ import math
 import queue
 import threading
 import time
-from typing import Iterator, Optional, Sequence
+from typing import Callable, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,8 +113,13 @@ from repro.core.pipeline import (
 )
 from repro.core.tiling import TileArg, TileSpec
 from repro.kernels.registry import resolve_dispatch
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.serving.admission import AdmissionController
+from repro.serving.faults import FaultPlan
 
 _EOS = object()          # end-of-stream sentinel flowing through the stages
+
+_STAGES = ("assemble", "support", "dense", "emit")
 
 
 # ---------------------------------------------------------------------------
@@ -80,13 +127,24 @@ _EOS = object()          # end-of-stream sentinel flowing through the stages
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class CompletedFrame:
-    """One finished request, as delivered by :meth:`StereoService.collect`."""
+    """One finished request, as delivered by :meth:`StereoService.collect`.
+
+    ``error`` is the terminal failure state: ``None`` for a successful
+    frame (``disparity`` is the (H, W) float32 map), else a message
+    describing why the frame failed (compute fault after retry, or shed
+    for a passed deadline) with ``disparity=None``.
+    """
 
     request_id: int
     stream_id: int
     frame_id: int
-    disparity: np.ndarray          # (H, W) float32, native resolution
-    latency_s: float               # submit() -> emitted
+    disparity: Optional[np.ndarray]    # (H, W) float32, native resolution
+    latency_s: float                   # submit() -> emitted
+    error: Optional[str] = None        # terminal failure reason, if any
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +154,7 @@ class ServiceStats:
     submitted: int
     completed: int
     dropped: int                   # discarded by stop(drain=False)
-    pending: int                   # submitted - completed - dropped
+    pending: int                   # submitted - completed - dropped - failed - shed
     waves: int
     padded_slots: int              # batch slots filled by padding, not work
     wave_occupancy: float          # real frames / total wave slots
@@ -114,6 +172,17 @@ class ServiceStats:
     backend: str = ""              # RESOLVED kernel backend the waves run on
     tile: Optional[TileSpec] = None  # resolved TileSpec; None == untiled
                                      # (an explicit UNTILED request)
+    # ---- fault containment / admission control (PR 6) ----
+    shed: int = 0                  # requests shed pre-compute by admission
+    expired: int = 0               # subset of shed: deadline already passed
+    retried: int = 0               # single-frame retry attempts run
+    failed_frames: int = 0         # frames delivered with a compute error
+    degraded_waves: int = 0        # waves run with the narrowed prior band
+    degraded: bool = False         # current degraded-mode state
+    admitted_by_stream: tuple = () # ((stream_id, admitted), ...) fairness view
+    shed_by_stream: tuple = ()     # ((stream_id, shed), ...)
+    stage_liveness: tuple = ()     # ((stage, alive), ...) from the heartbeat
+    stage_stragglers: tuple = ()   # stage names slower than the median
 
 
 # ---------------------------------------------------------------------------
@@ -121,16 +190,19 @@ class ServiceStats:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class WavePrograms:
-    """The two compiled halves of one wave-shaped frame program."""
+    """The compiled halves of one wave-shaped frame program."""
 
     key: tuple                     # (H, W) bucketed
     batch: int                     # wave width the programs were traced at
     support: object                # (B,H,W)x2 -> (dl, dr, interpolated support)
     dense: object                  # (dl, dr, support) -> (B,H,W) disparity
+    dense_degraded: object = None  # same, with the narrowed prior band
+                                   # (present only when the cache was built
+                                   # with degraded_radius)
 
 
 class FrameProgramCache:
-    """Compiled wave programs keyed on ``(H, W)`` under fixed
+    """Compiled wave programs keyed on ``(H, W, batch)`` under fixed
     ``(backend, params)``, with optional resolution bucketing and a
     per-bucket wave width.
 
@@ -146,21 +218,31 @@ class FrameProgramCache:
     fastest per-frame width, which :meth:`batch_for` then reports to wave
     assembly (wave batching loses to narrower waves once per-frame
     intermediates outgrow per-core cache, so the best width is
-    resolution-dependent).  ``tile`` threads a
+    resolution-dependent).  Programs are cached per ``(shape, width)`` so
+    the batch-1 fallback programs the containment retry path compiles
+    never evict a bucket's calibrated hot program.  ``tile`` threads a
     :class:`~repro.core.tiling.TileSpec` into BOTH wave programs: the
     dense stage's row tiles and the support stage's row-block streaming
     scan (bitwise identical; a memory-locality decision).  ``backend`` /
     ``tile`` accept None and resolve to the device defaults once, here,
     so every program the cache ever builds shares one concrete dispatch.
+    With ``degraded_radius`` set, every program additionally carries a
+    ``dense_degraded`` variant whose plane-prior band is narrowed to that
+    radius -- the serving engine's overload quality-for-latency knob.
     """
 
     def __init__(self, params: ElasParams, batch: int,
                  backend: Optional[str] = None, bucket: int = 1,
-                 tile: TileArg = None):
+                 tile: TileArg = None,
+                 degraded_radius: Optional[int] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if bucket < 1:
             raise ValueError(f"bucket must be >= 1, got {bucket}")
+        if degraded_radius is not None and degraded_radius < 0:
+            raise ValueError(
+                f"degraded_radius must be >= 0 or None, got {degraded_radius}"
+            )
         self.params = params
         self.batch = batch
         # Resolve the device-aware defaults exactly once, at construction:
@@ -168,11 +250,12 @@ class FrameProgramCache:
         # probe can never introduce a hot-path retrace.
         self.backend, self.tile = resolve_dispatch(backend, tile)
         self.bucket = bucket
+        self.degraded_radius = degraded_radius
         self.hits = 0
         self.misses = 0
         self.calibrations = 0
         self._lock = threading.Lock()
-        self._programs: dict[tuple, WavePrograms] = {}
+        self._programs: dict[tuple, WavePrograms] = {}   # (key, batch) ->
         self._batch_choice: dict[tuple, int] = {}
 
     def bucket_shape(self, h: int, w: int) -> tuple[int, int]:
@@ -191,34 +274,37 @@ class FrameProgramCache:
         return len(self._programs)
 
     def get(self, h: int, w: int, batch: Optional[int] = None) -> WavePrograms:
-        """Resolve the wave program for a *bucketed* shape, compiling on miss.
+        """Resolve the wave program for a *bucketed* shape at the given
+        wave width, compiling on miss.
 
         ``batch`` is the wave width the caller actually assembled; a cached
         program traced at a different width would silently retrace inside
-        jit, so a width mismatch (possible only if calibration raced live
-        traffic) is counted as an honest miss and rebuilt.
+        jit, so each width gets its own cache entry (the batch-1 fallback
+        programs the retry path uses live alongside the calibrated hot
+        width instead of evicting it).
         """
         key = (h, w)
         want = batch if batch is not None else self.batch_for(*key)
         with self._lock:
-            prog = self._programs.get(key)
-            if prog is not None and prog.batch == want:
+            prog = self._programs.get((key, want))
+            if prog is not None:
                 self.hits += 1
                 return prog
             self.misses += 1
             prog = self._build(key, want)
-            self._programs[key] = prog
+            self._programs[(key, want)] = prog
             return prog
 
     def warm(self, h: int, w: int) -> WavePrograms:
         """Pre-compile the program for (h, w) without touching hit/miss
         counters, and force actual XLA compilation with a dummy wave."""
         key = self.bucket_shape(h, w)
+        want = self.batch_for(*key)
         with self._lock:
-            prog = self._programs.get(key)
+            prog = self._programs.get((key, want))
             if prog is None:
-                prog = self._build(key, self.batch_for(*key))
-                self._programs[key] = prog
+                prog = self._build(key, want)
+                self._programs[(key, want)] = prog
         self._run_dummy(prog)
         return prog
 
@@ -252,7 +338,7 @@ class FrameProgramCache:
                 best_b, best_t, best_prog = b, t, prog
         with self._lock:
             self._batch_choice[key] = best_b
-            self._programs[key] = best_prog
+            self._programs[(key, best_b)] = best_prog
             self.calibrations += 1
         return best_b
 
@@ -260,6 +346,8 @@ class FrameProgramCache:
         zeros = jnp.zeros((prog.batch, *prog.key), jnp.float32)
         dl, dr, sup = prog.support(zeros, zeros)
         prog.dense(dl, dr, sup).block_until_ready()
+        if prog.dense_degraded is not None:
+            prog.dense_degraded(dl, dr, sup).block_until_ready()
 
     def _build(self, key: tuple, batch: int) -> WavePrograms:
         p, backend, tile = self.params, self.backend, self.tile
@@ -281,11 +369,24 @@ class FrameProgramCache:
                 dl, dr, sup, p, backend=backend, tile=tile
             )
 
+        dense_degraded = None
+        if self.degraded_radius is not None:
+            radius = self.degraded_radius
+
+            def dense_wave_degraded(dl, dr, sup):
+                return ielas_dense_stage_batched(
+                    dl, dr, sup, p, backend=backend, tile=tile,
+                    band_radius=radius,
+                )
+
+            dense_degraded = jax.jit(dense_wave_degraded)
+
         return WavePrograms(
             key=key,
             batch=batch,
             support=jax.jit(support_wave),
             dense=jax.jit(dense_wave),
+            dense_degraded=dense_degraded,
         )
 
 
@@ -314,6 +415,7 @@ class _Request:
     w: int
     t_submit: float
     seq: int = 0               # per-stream submission sequence (in_order)
+    deadline: Optional[float] = None   # absolute time.monotonic() budget
 
 
 @dataclasses.dataclass
@@ -322,6 +424,8 @@ class _Wave:
     requests: list                 # valid slots, in submission order
     left: object                   # (B, H, W) device array
     right: object
+    index: int = 0                 # global wave-assembly index (fault keys)
+    degraded: bool = False         # run the narrowed-band dense program
     programs: Optional[WavePrograms] = None
     mid: Optional[tuple] = None    # (dl, dr, support) between stages
     disp: object = None
@@ -362,28 +466,69 @@ class StereoService:
                  buckets (A0, B1, A2 on one stream -> A0, B1, A2).  Wave
                  assembly is unchanged -- only delivery is deferred, so
                  throughput is untouched and held frames' latency includes
-                 the hold time.
+                 the hold time.  Failed and shed frames deliver their
+                 sequence slot like any other frame, so a dead frame never
+                 blocks its stream.
     wave_linger: how long assembly waits to fill a partial wave before
                  dispatching it padded (seconds).
     max_pending: ingest queue bound; submit() blocks beyond this
                  (the backpressure point, measured in stats).
+    fault_plan:  a :class:`~repro.serving.faults.FaultPlan` for
+                 deterministic fault injection in the stage loops
+                 (testing/chaos engineering; None in production).
+    max_wave_failures: consecutive fully-failed waves (no slot recovered
+                 by retry) that count as SYSTEMIC failure and abort the
+                 engine.  Isolated wave/frame failures never do.
+    degrade_watermark: assembly backlog depth that engages degraded mode
+                 (None disables it); see ``degraded_band``.
+    clear_watermark: backlog depth that clears degraded mode (default:
+                 half the degrade watermark; hysteresis).
+    degraded_band: plane-prior band half-width for degraded waves (the
+                 normal band is ``params.plane_radius``; the streaming
+                 dense scan's cost is linear in band width).
+    heartbeat_timeout: stage heartbeat staleness (seconds) after which a
+                 stage thread reports dead in :meth:`stats`.
+    clock:       monotonic clock for the heartbeat monitor (injectable for
+                 fake-clock tests; does not affect latency accounting).
     """
 
     def __init__(self, params: ElasParams, batch: int = 1, depth: int = 2,
                  backend: Optional[str] = None, bucket: int = 1,
                  tile: TileArg = None, autobatch: bool = False,
                  in_order: bool = False, wave_linger: float = 0.002,
-                 max_pending: int = 64):
+                 max_pending: int = 64,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_wave_failures: int = 3,
+                 degrade_watermark: Optional[int] = None,
+                 clear_watermark: Optional[int] = None,
+                 degraded_band: int = 1,
+                 heartbeat_timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        if max_wave_failures < 1:
+            raise ValueError(
+                f"max_wave_failures must be >= 1, got {max_wave_failures}"
+            )
         self.params = params
         self.batch = batch
         self.depth = depth
         self.autobatch = autobatch
         self.in_order = in_order
         self.wave_linger = wave_linger
-        self._cache = FrameProgramCache(params, batch, backend, bucket=bucket,
-                                        tile=tile)
+        self.fault_plan = fault_plan
+        self.max_wave_failures = max_wave_failures
+        self.heartbeat_timeout = heartbeat_timeout
+        self._clock = clock
+        self._admission = AdmissionController(
+            degrade_watermark=degrade_watermark,
+            clear_watermark=clear_watermark,
+        )
+        self._cache = FrameProgramCache(
+            params, batch, backend, bucket=bucket, tile=tile,
+            degraded_radius=(degraded_band
+                             if degrade_watermark is not None else None),
+        )
         # mirror the cache's resolved dispatch (device-aware defaults)
         self.backend = self._cache.backend
         self.tile = self._cache.tile
@@ -399,16 +544,33 @@ class StereoService:
         self._done = threading.Event()     # emitter saw EOS
         self._threads: list[threading.Thread] = []
         self._error: Optional[BaseException] = None
+        self._monitor = HeartbeatMonitor(
+            hosts=list(_STAGES), timeout=heartbeat_timeout, clock=clock
+        )
+        self._stage_steps: dict = {s: 0 for s in _STAGES}
 
         self._slock = threading.Lock()
+        # Ordering lock: guards the in_order reordering state, which is
+        # touched by BOTH the emit loop and the assembly loop (shed frames
+        # deliver their sequence slot directly from assembly).  Never held
+        # while taking _slock's critical sections in reverse -- _deliver
+        # takes _slock inside _olock, and nothing takes _olock under _slock
+        # while threads run.
+        self._olock = threading.Lock()
         self._next_request_id = 0
         self._stream_seq: dict = collections.defaultdict(int)   # next seq to assign
-        self._reorder: dict = {}       # stream_id -> {seq: (req, disparity)}
+        self._reorder: dict = {}       # stream_id -> {seq: (req, disp, err)}
         self._next_emit: dict = collections.defaultdict(int)    # next seq to deliver
         self._lost_seqs: dict = collections.defaultdict(set)    # never deliverable
+        self._inflight: dict = {}      # request_id -> (stream_id, frame_id)
         self._submitted = 0
         self._completed = 0
         self._dropped = 0
+        self._failed = 0               # frames delivered with a compute error
+        self._shed = 0                 # frames shed pre-compute by admission
+        self._retried = 0              # single-frame retry attempts
+        self._degraded_waves = 0
+        self._consec_wave_failures = 0
         self._waves_built = 0
         self._wave_slots = 0
         self._padded_slots = 0
@@ -432,21 +594,30 @@ class StereoService:
         self._abort.clear()
         self._done.clear()
         self._error = None
+        self._consec_wave_failures = 0
+        self._monitor = HeartbeatMonitor(
+            hosts=list(_STAGES), timeout=self.heartbeat_timeout,
+            clock=self._clock,
+        )
+        self._stage_steps = {s: 0 for s in _STAGES}
         for q in (self._waves, self._mid, self._ready):
             while True:
                 try:
                     q.get_nowait()
                 except queue.Empty:
                     break
-        with self._slock:
+        with self._olock:
             # Frames stranded in the reordering buffer by an aborted stop
-            # lost their results and can never be delivered; likewise every
-            # assigned seq that is neither already delivered nor still
-            # waiting in the ingest queue (ingest survivors ARE served
-            # after restart, so their seqs stay live).  Mark the dead seqs
-            # so the in-order flush skips over them instead of holding all
-            # later frames forever.
+            # lost their results and can never be delivered.
             self._reorder.clear()
+        with self._slock:
+            # Every assigned seq that is neither already delivered nor still
+            # waiting in the ingest queue (ingest survivors ARE served
+            # after restart, so their seqs stay live) is dead.  Mark the
+            # dead seqs so the in-order flush skips over them instead of
+            # holding all later frames forever.  (Threads are stopped here,
+            # so touching the _olock-guarded maps under _slock cannot
+            # deadlock or race the emitter.)
             with self._ingest.mutex:
                 surviving = {
                     (r.stream_id, r.seq) for r in list(self._ingest.queue)
@@ -473,7 +644,8 @@ class StereoService:
                     self._next_emit.pop(sid, None)
                     self._lost_seqs.pop(sid, None)
             self._dropped = max(
-                0, self._submitted - self._completed - self._ingest.qsize()
+                0, self._submitted - self._completed - self._failed
+                - self._shed - self._ingest.qsize()
             )
         stages = [
             ("stereo-assemble", self._assemble_loop),
@@ -491,18 +663,34 @@ class StereoService:
     def stop(self, drain: bool = True, timeout: float = 120.0) -> None:
         """Shut down.  ``drain=True`` finishes all queued work first;
         ``drain=False`` discards queued work (counted as ``dropped``) and
-        returns as soon as the stage threads exit."""
+        returns as soon as the stage threads exit.
+
+        The drain wait watches for a dead pipeline: an abort or a stored
+        worker error ends the wait promptly (the stored error is re-raised
+        below) instead of sleeping out the full ``timeout``.  Those two
+        signals are sufficient -- a stage thread can only die abnormally
+        through ``_guard``, which always stores the error and aborts.  (A
+        stage exiting is NOT a death signal by itself: during a normal
+        drain the stages shut down in order as EOS passes through them.)
+        """
         if not self._threads:
             return
         if drain and self._error is None:
             self._drain.set()
-            self._done.wait(timeout)
+            t_end = time.monotonic() + timeout
+            while not self._done.is_set() and time.monotonic() < t_end:
+                if self._abort.is_set() or self._error is not None:
+                    break           # pipeline died mid-drain: stop waiting
+                self._done.wait(0.1)
         self._abort.set()
         for t in self._threads:
             t.join(timeout=10.0)
         self._threads = []
         with self._slock:
-            self._dropped = self._submitted - self._completed
+            self._dropped = max(
+                0, self._submitted - self._completed - self._failed
+                - self._shed
+            )
         if self._error is not None:
             raise RuntimeError("stereo service worker failed") from self._error
 
@@ -549,8 +737,14 @@ class StereoService:
             self._cache.warm(h, w)
 
     def submit(self, frame_id: int, left: np.ndarray, right: np.ndarray,
-               stream_id: int = 0) -> int:
+               stream_id: int = 0,
+               deadline: Optional[float] = None) -> int:
         """Enqueue one stereo pair; returns the request id.
+
+        ``deadline`` is an absolute ``time.monotonic()`` timestamp: a
+        request whose deadline passes before its wave is assembled is shed
+        without spending device time and delivered as an error frame
+        (``shed``/``expired`` in :meth:`stats`).  ``None`` == no deadline.
 
         Blocks only when ``max_pending`` requests are already in flight --
         the backpressure point (time spent blocked is accounted in
@@ -569,6 +763,8 @@ class StereoService:
                 f"frame {left.shape} too small: needs at least one "
                 f"{min_dim}x{min_dim} grid cell (grid_size={self.params.grid_size})"
             )
+        if deadline is not None:
+            deadline = float(deadline)
         now = time.monotonic()
         with self._slock:
             rid = self._next_request_id
@@ -582,10 +778,11 @@ class StereoService:
                 self._stream_seq[stream_id] = seq + 1
             if self._t_first_submit is None:
                 self._t_first_submit = now
+            self._inflight[rid] = (stream_id, frame_id)
         req = _Request(
             request_id=rid, stream_id=stream_id, frame_id=frame_id,
             left=left, right=right, h=left.shape[0], w=left.shape[1],
-            t_submit=now, seq=seq,
+            t_submit=now, seq=seq, deadline=deadline,
         )
         t0 = time.monotonic()
         while True:     # abort-aware put: never deadlock on a dead service
@@ -606,23 +803,50 @@ class StereoService:
             self._backpressure_s += waited
         return rid
 
-    def collect(self, n: int, timeout: float = 60.0) -> list[CompletedFrame]:
-        """Up to ``n`` completed frames, waiting at most ``timeout``."""
+    def collect(self, n: int, timeout: float = 60.0,
+                strict: bool = False) -> list[CompletedFrame]:
+        """Up to ``n`` completed frames (successes AND terminal failures),
+        waiting at most ``timeout`` seconds TOTAL -- the deadline covers
+        the whole call, not each frame, so ``n`` slow frames can never
+        stretch the wait to ``n x timeout``.
+
+        With ``strict=True``, fewer than ``n`` frames inside the deadline
+        raises :class:`TimeoutError` naming the still-outstanding frame
+        ids; the partial results are attached as ``err.partial``.  The
+        default returns the partial list (compatible with pollers like
+        :meth:`run_stream` that call with tiny timeouts).
+        """
         out: list[CompletedFrame] = []
         deadline = time.monotonic() + timeout
-        while len(out) < n and time.monotonic() < deadline:
+        while len(out) < n:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
             try:
-                out.append(self._out.get(timeout=0.05))
+                out.append(self._out.get(timeout=min(0.05, remaining)))
                 continue
             except queue.Empty:
                 pass
             # only surface a worker failure once finished frames are drained
             if self._error is not None:
                 raise RuntimeError("stereo service worker failed") from self._error
+        if strict and len(out) < n:
+            with self._slock:
+                missing = sorted(
+                    fid for _, fid in self._inflight.values()
+                )
+            err = TimeoutError(
+                f"collect() got {len(out)}/{n} frames within {timeout:.3f}s; "
+                f"outstanding frame ids: {missing[:32]}"
+                + (" ..." if len(missing) > 32 else "")
+            )
+            err.partial = out
+            raise err
         return out
 
     def results(self, n: int, timeout: float = 60.0) -> list[tuple[int, np.ndarray]]:
-        """Compatibility shim: ``(frame_id, disparity)`` tuples."""
+        """Compatibility shim: ``(frame_id, disparity)`` tuples (disparity
+        is None for frames that failed or were shed)."""
         return [(c.frame_id, c.disparity) for c in self.collect(n, timeout)]
 
     def run_stream(
@@ -632,7 +856,8 @@ class StereoService:
         """Process a single stream; returns ``((frame_id, disp) list, wall_s)``.
 
         Returns whatever completed within ``timeout`` (possibly fewer than
-        ``n_frames``) rather than blocking forever on a lost frame."""
+        ``n_frames``) rather than blocking forever on a lost frame.  Failed
+        or shed frames appear with ``disp=None``."""
         t0 = time.monotonic()
         deadline = t0 + timeout
         submitted = 0
@@ -653,6 +878,12 @@ class StereoService:
         return results, time.monotonic() - t0
 
     def stats(self) -> ServiceStats:
+        adm = self._admission.counters()
+        dead = set(self._monitor.dead_hosts()) if self._threads else set()
+        liveness = tuple(
+            (s, s not in dead) for s in _STAGES
+        ) if self._threads else ()
+        stragglers = tuple(self._monitor.stragglers()) if self._threads else ()
         with self._slock:
             lats = sorted(self._latencies)
             n = len(lats)
@@ -668,7 +899,8 @@ class StereoService:
                 submitted=self._submitted,
                 completed=self._completed,
                 dropped=self._dropped,
-                pending=self._submitted - self._completed - self._dropped,
+                pending=(self._submitted - self._completed - self._dropped
+                         - self._failed - self._shed),
                 waves=self._waves_built,
                 padded_slots=self._padded_slots,
                 wave_occupancy=(
@@ -688,11 +920,29 @@ class StereoService:
                 batch_by_bucket=self._cache.batch_choices(),
                 backend=self.backend,
                 tile=self.tile if isinstance(self.tile, TileSpec) else None,
+                shed=self._shed,
+                expired=adm["expired"],
+                retried=self._retried,
+                failed_frames=self._failed,
+                degraded_waves=self._degraded_waves,
+                degraded=adm["degraded"],
+                admitted_by_stream=adm["admitted_by_stream"],
+                shed_by_stream=adm["shed_by_stream"],
+                stage_liveness=liveness,
+                stage_stragglers=stragglers,
             )
 
     # ------------------------------------------------------- stage plumbing
-    def _put(self, q: queue.Queue, item) -> bool:
+    def _beat(self, stage: str) -> None:
+        self._monitor.beat(stage, self._stage_steps[stage])
+
+    def _step(self, stage: str) -> None:
+        self._stage_steps[stage] += 1
+        self._monitor.beat(stage, self._stage_steps[stage])
+
+    def _put(self, q: queue.Queue, item, stage: str) -> bool:
         while not self._abort.is_set():
+            self._beat(stage)
             try:
                 q.put(item, timeout=0.05)
                 return True
@@ -700,8 +950,9 @@ class StereoService:
                 continue
         return False
 
-    def _get(self, q: queue.Queue):
+    def _get(self, q: queue.Queue, stage: str):
         while not self._abort.is_set():
+            self._beat(stage)
             try:
                 return q.get(timeout=0.05)
             except queue.Empty:
@@ -712,13 +963,30 @@ class StereoService:
     def _assemble_loop(self) -> None:
         pending: collections.deque = collections.deque()
         while not self._abort.is_set():
+            self._beat("assemble")
             draining = self._drain.is_set()
             try:
                 pending.append(self._ingest.get(timeout=0.02))
             except queue.Empty:
                 if draining and not pending:
-                    self._put(self._waves, _EOS)
+                    self._put(self._waves, _EOS, "assemble")
                     return
+                if not pending:
+                    continue
+
+            # Shed work that expired while queued -- in EVERY bucket, so an
+            # expired request never waits for its bucket to reach the head
+            # of the line before being declared dead.
+            now = time.monotonic()
+            if any(r.deadline is not None and r.deadline < now
+                   for r in pending):
+                _, dead = self._admission.select(list(pending), 0, now)
+                dead_ids = {r.request_id for r in dead}
+                pending = collections.deque(
+                    r for r in pending if r.request_id not in dead_ids
+                )
+                for r in dead:
+                    self._shed_request(r)
                 if not pending:
                     continue
 
@@ -739,18 +1007,39 @@ class StereoService:
                 except queue.Empty:
                     break
 
-            wave_reqs, rest = [], collections.deque()
-            for r in pending:
-                if (len(wave_reqs) < width
-                        and self._cache.bucket_shape(r.h, r.w) == key):
-                    wave_reqs.append(r)
-                else:
-                    rest.append(r)
-            pending = rest
-            if not self._put(self._waves, self._build_wave(key, wave_reqs, width)):
+            # Admission: deadline shedding + per-stream round-robin slots
+            # over the head bucket's candidates.
+            candidates = [
+                r for r in pending
+                if self._cache.bucket_shape(r.h, r.w) == key
+            ]
+            admitted, dead = self._admission.select(
+                candidates, width, time.monotonic()
+            )
+            taken = {r.request_id for r in admitted}
+            taken |= {r.request_id for r in dead}
+            pending = collections.deque(
+                r for r in pending if r.request_id not in taken
+            )
+            for r in dead:
+                self._shed_request(r)
+            if not admitted:
+                continue
+            backlog = self._ingest.qsize() + len(pending) + len(admitted)
+            degraded = self._admission.update_pressure(backlog)
+            wave = self._build_wave(key, admitted, width, degraded)
+            if not self._put(self._waves, wave, "assemble"):
                 return
+            self._step("assemble")
 
-    def _build_wave(self, key: tuple, reqs: list, width: int) -> _Wave:
+    def _shed_request(self, req: _Request) -> None:
+        self._finish(req, None, error=(
+            f"shed by admission control: deadline expired before compute "
+            f"(frame {req.frame_id}, stream {req.stream_id})"
+        ), shed=True)
+
+    def _build_wave(self, key: tuple, reqs: list, width: int,
+                    degraded: bool = False) -> _Wave:
         bh, bw = key
         pad = width - len(reqs)
 
@@ -768,92 +1057,225 @@ class StereoService:
         for r in reqs:              # emit only needs ids/shape/timing: release
             r.left = r.right = None     # the host frames while waves are queued
         with self._slock:
+            index = self._waves_built
             self._waves_built += 1
             self._wave_slots += width
             self._padded_slots += pad
+            if degraded:
+                self._degraded_waves += 1
         return _Wave(
-            key=key, requests=reqs,
+            key=key, requests=reqs, index=index, degraded=degraded,
             left=jnp.asarray(np.stack(lefts)),
             right=jnp.asarray(np.stack(rights)),
         )
 
-    # ---------------------------------------------------- stage 1: support
-    def _support_loop(self) -> None:
-        while True:
-            wave = self._get(self._waves)
-            if wave is None:
-                return
-            if wave is _EOS:
-                self._put(self._mid, _EOS)
-                return
-            wave.programs = self._cache.get(*wave.key,
-                                            batch=int(wave.left.shape[0]))
-            wave.mid = wave.programs.support(wave.left, wave.right)
-            wave.left = wave.right = None
-            if not self._put(self._mid, wave):
-                return
+    # ------------------------------------------- stages 1+2: contained exec
+    def _check_faults(self, stage: str, wave: _Wave) -> None:
+        if self.fault_plan is not None:
+            self.fault_plan.check(
+                stage, wave.index,
+                tuple(r.request_id for r in wave.requests),
+            )
 
-    # ------------------------------------------------------ stage 2: dense
-    def _dense_loop(self) -> None:
+    def _exec_stage(self, wave: _Wave, stage: str) -> None:
+        """Run one stage's program over one wave, blocking on the result so
+        failures surface HERE -- in the stage that owns the retry -- rather
+        than asynchronously at emit."""
+        self._check_faults(stage, wave)
+        if stage == "support":
+            wave.programs = self._cache.get(
+                *wave.key, batch=int(wave.left.shape[0])
+            )
+            wave.mid = wave.programs.support(wave.left, wave.right)
+            jax.block_until_ready(wave.mid)
+            wave.left = wave.right = None
+        else:
+            prog = wave.programs
+            dense = (prog.dense_degraded
+                     if wave.degraded and prog.dense_degraded is not None
+                     else prog.dense)
+            wave.disp = dense(*wave.mid)
+            jax.block_until_ready(wave.disp)
+            wave.mid = None
+
+    def _retry_slot(self, wave: _Wave, stage: str, slot: int) -> _Wave:
+        """The bounded retry: re-run ONE slot of a failed wave as a
+        single-frame fallback wave (batch-1 program; a cold-path compile
+        the first time a bucket needs it)."""
+        req = wave.requests[slot]
+        with self._slock:
+            self._retried += 1
+        prog = self._cache.get(*wave.key, batch=1)
+        sub = _Wave(key=wave.key, requests=[req], left=None, right=None,
+                    index=wave.index, degraded=wave.degraded, programs=prog)
+        if self.fault_plan is not None:
+            self.fault_plan.check(stage, wave.index, (req.request_id,))
+        if stage == "support":
+            sub.mid = prog.support(wave.left[slot:slot + 1],
+                                   wave.right[slot:slot + 1])
+            jax.block_until_ready(sub.mid)
+        else:
+            mid = tuple(m[slot:slot + 1] for m in wave.mid)
+            dense = (prog.dense_degraded
+                     if wave.degraded and prog.dense_degraded is not None
+                     else prog.dense)
+            sub.disp = dense(*mid)
+            jax.block_until_ready(sub.disp)
+        return sub
+
+    def _contain(self, wave: _Wave, stage: str, exc: Exception,
+                 downstream: queue.Queue) -> bool:
+        """Wave-scoped error containment: the failed wave is split into
+        single-frame fallback waves and retried once per slot.  Slots that
+        recover continue downstream; slots that fail again are quarantined
+        (delivered as error frames).  Only repeated SYSTEMIC failure --
+        ``max_wave_failures`` consecutive waves with no surviving slot --
+        aborts the engine.  Returns False only when aborting mid-push."""
+        survivors: list[_Wave] = []
+        failures: list[tuple[_Request, Exception]] = []
+        for slot, req in enumerate(wave.requests):
+            try:
+                survivors.append(self._retry_slot(wave, stage, slot))
+            except Exception as retry_exc:     # noqa: BLE001 -- quarantine
+                failures.append((req, retry_exc))
+        for req, retry_exc in failures:
+            self._finish(req, None, error=(
+                f"{stage} stage failed after retry: {retry_exc!r} "
+                f"(wave {wave.index}, first failure: {exc!r})"
+            ))
+        systemic = False
+        with self._slock:
+            if failures and not survivors:
+                self._consec_wave_failures += 1
+                systemic = (self._consec_wave_failures
+                            >= self.max_wave_failures)
+            else:
+                self._consec_wave_failures = 0
+        if systemic:
+            raise RuntimeError(
+                f"systemic failure: {self.max_wave_failures} consecutive "
+                f"waves failed completely in the {stage} stage"
+            ) from exc
+        for sub in survivors:
+            if not self._put(downstream, sub, stage):
+                return False
+        return True
+
+    def _stage_loop(self, stage: str, upstream: queue.Queue,
+                    downstream: queue.Queue) -> None:
         while True:
-            wave = self._get(self._mid)
+            wave = self._get(upstream, stage)
             if wave is None:
                 return
             if wave is _EOS:
-                self._put(self._ready, _EOS)
+                self._put(downstream, _EOS, stage)
                 return
-            wave.disp = wave.programs.dense(*wave.mid)
-            wave.mid = None
-            if not self._put(self._ready, wave):
-                return
+            try:
+                self._exec_stage(wave, stage)
+            except Exception as e:             # noqa: BLE001 -- contained
+                if not self._contain(wave, stage, e, downstream):
+                    return
+            else:
+                with self._slock:
+                    self._consec_wave_failures = 0
+                if not self._put(downstream, wave, stage):
+                    return
+            self._step(stage)
+
+    def _support_loop(self) -> None:
+        self._stage_loop("support", self._waves, self._mid)
+
+    def _dense_loop(self) -> None:
+        self._stage_loop("dense", self._mid, self._ready)
 
     # ------------------------------------------------------- stage 3: emit
     def _emit_loop(self) -> None:
         while True:
-            wave = self._get(self._ready)
+            wave = self._get(self._ready, "emit")
             if wave is None:
                 return
             if wave is _EOS:
                 self._done.set()
                 return
-            disp = np.asarray(wave.disp)       # device -> host sync point
+            try:
+                self._check_faults("emit", wave)
+                disp = np.asarray(wave.disp)   # device -> host sync point
+            except Exception as e:             # noqa: BLE001 -- contain: the
+                # wave's device buffers are gone, so there is no retry here;
+                # its frames fail terminally but the engine stays up.
+                for req in wave.requests:
+                    self._finish(req, None, error=(
+                        f"emit stage failed: {e!r} (wave {wave.index})"
+                    ))
+                with self._slock:
+                    self._consec_wave_failures += 1
+                    systemic = (self._consec_wave_failures
+                                >= self.max_wave_failures)
+                if systemic:
+                    raise RuntimeError(
+                        f"systemic failure: {self.max_wave_failures} "
+                        f"consecutive waves failed at emit"
+                    ) from e
+                self._step("emit")
+                continue
+            with self._slock:
+                self._consec_wave_failures = 0
             for slot, req in enumerate(wave.requests):
                 out = np.ascontiguousarray(disp[slot, : req.h, : req.w])
-                if not self.in_order:
-                    self._deliver(req, out)
-                    continue
-                # Per-stream reordering buffer: hold this frame until every
-                # earlier submission of the same stream has been delivered,
-                # then flush the now-consecutive run.  Latency is measured
-                # at delivery, so held frames honestly include hold time.
-                sid = req.stream_id
-                self._reorder.setdefault(sid, {})[req.seq] = (req, out)
-                pending = self._reorder[sid]
-                while True:
-                    nxt = self._next_emit[sid]
-                    if nxt in self._lost_seqs[sid]:
-                        # known-dead seq (dropped by an aborted stop):
-                        # skip it so survivors behind it still deliver
-                        self._lost_seqs[sid].discard(nxt)
-                        self._next_emit[sid] = nxt + 1
-                    elif nxt in pending:
-                        r, o = pending.pop(nxt)
-                        self._next_emit[sid] = nxt + 1
-                        self._deliver(r, o)
-                    else:
-                        break
+                self._finish(req, out)
             wave.disp = None
+            self._step("emit")
 
-    def _deliver(self, req: _Request, out: np.ndarray) -> None:
+    # ------------------------------------------------------------ delivery
+    def _finish(self, req: _Request, out: Optional[np.ndarray],
+                error: Optional[str] = None, shed: bool = False) -> None:
+        """Terminal delivery for one request -- success, compute failure,
+        or admission shed.  Honors the in_order reordering buffer: every
+        terminal state advances the stream's sequence, so a failed or shed
+        frame never blocks the frames behind it."""
+        if not self.in_order:
+            self._deliver(req, out, error, shed)
+            return
+        with self._olock:
+            # Per-stream reordering buffer: hold this frame until every
+            # earlier submission of the same stream has been delivered,
+            # then flush the now-consecutive run.  Latency is measured
+            # at delivery, so held frames honestly include hold time.
+            sid = req.stream_id
+            self._reorder.setdefault(sid, {})[req.seq] = (req, out, error, shed)
+            pending = self._reorder[sid]
+            while True:
+                nxt = self._next_emit[sid]
+                if nxt in self._lost_seqs[sid]:
+                    # known-dead seq (dropped by an aborted stop):
+                    # skip it so survivors behind it still deliver
+                    self._lost_seqs[sid].discard(nxt)
+                    self._next_emit[sid] = nxt + 1
+                elif nxt in pending:
+                    r, o, err, sh = pending.pop(nxt)
+                    self._next_emit[sid] = nxt + 1
+                    self._deliver(r, o, err, sh)
+                else:
+                    break
+
+    def _deliver(self, req: _Request, out: Optional[np.ndarray],
+                 error: Optional[str] = None, shed: bool = False) -> None:
         now = time.monotonic()
         lat = now - req.t_submit
         with self._slock:
-            self._completed += 1
-            self._latencies.append(lat)
-            self._lat_sum += lat
-            self._lat_max = max(self._lat_max, lat)
+            self._inflight.pop(req.request_id, None)
+            if error is None:
+                self._completed += 1
+                self._latencies.append(lat)
+                self._lat_sum += lat
+                self._lat_max = max(self._lat_max, lat)
+            elif shed:
+                self._shed += 1
+            else:
+                self._failed += 1
             self._t_last_emit = now
         self._out.put(CompletedFrame(
             request_id=req.request_id, stream_id=req.stream_id,
             frame_id=req.frame_id, disparity=out, latency_s=lat,
+            error=error,
         ))

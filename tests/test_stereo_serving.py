@@ -340,6 +340,62 @@ class TestLifecycle:
                        np.zeros((4, 9), np.float32))
 
 
+@pytest.mark.faults
+class TestOverload:
+    def test_two_stream_overload_fairness_and_shedding(self):
+        """Saturate ingest from a flooding stream (tight deadlines) while a
+        quiet stream trickles: admission must shed the flood's expired work
+        (counted, delivered as error frames), grant the quiet stream its
+        slots (never starved, never shed), and per-stream in-order delivery
+        must hold with the shed frames occupying their sequence slots."""
+        from repro.serving import FaultPlan, FaultSpec
+        # Slow the dense stage so the flood genuinely outruns capacity, and
+        # keep depth=1 so the pipeline's bounded queues cannot swallow the
+        # whole flood before any deadline passes (deadlines are checked at
+        # wave ASSEMBLY -- the flood must be large enough that most of it is
+        # still queued when the deadline hits).
+        plan = FaultPlan([FaultSpec(stage="dense", kind="delay",
+                                    delay_s=0.2, times=None)])
+        svc = StereoService(P, batch=2, depth=1, wave_linger=0.01,
+                            in_order=True, fault_plan=plan, max_pending=64)
+        svc.warmup([(40, 64)])
+        frames = _frames(2, h=40, w=64)
+        n_flood, n_quiet = 40, 3
+        with svc:
+            deadline = time.monotonic() + 0.8
+            for i in range(n_flood):
+                svc.submit(i, *frames[i % 2], stream_id=0, deadline=deadline)
+            for i in range(n_quiet):
+                svc.submit(i, *frames[i % 2], stream_id=1)
+            done = svc.collect(n_flood + n_quiet, timeout=300)
+        st = svc.stats()
+        assert len(done) == n_flood + n_quiet
+
+        # shed counters increment, and shedding == expired deadlines here
+        assert st.shed > 0 and st.expired == st.shed
+        assert st.completed + st.shed == n_flood + n_quiet
+        flood_shed = [c for c in done if c.stream_id == 0 and not c.ok]
+        assert len(flood_shed) == st.shed
+        assert all("shed by admission control" in c.error for c in flood_shed)
+        shed_by = dict(st.shed_by_stream)
+        assert shed_by.get(0) == st.shed and 1 not in shed_by
+
+        # per-stream fairness: the quiet stream is fully served despite the
+        # flood, and the flood still got real slots before its deadline
+        quiet = [c for c in done if c.stream_id == 1]
+        assert len(quiet) == n_quiet and all(c.ok for c in quiet)
+        admitted = dict(st.admitted_by_stream)
+        assert admitted.get(1) == n_quiet
+        assert admitted.get(0, 0) >= 1
+
+        # per-stream in-order holds, with shed frames skipped in place
+        for sid in (0, 1):
+            got = [c.frame_id for c in done if c.stream_id == sid]
+            assert got == sorted(got), f"stream {sid} out of order: {got}"
+        ok_flood = [c.frame_id for c in done if c.stream_id == 0 and c.ok]
+        assert ok_flood == sorted(ok_flood)
+
+
 class TestBackendRegistry:
     def test_builtin_backends_registered(self):
         assert {"ref", "pallas", "pallas_tpu"} <= set(available_backends())
