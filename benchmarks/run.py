@@ -35,7 +35,9 @@ Flags:
     row-block-tiled support search), ``table4/dense_stage`` (the
     gather-free streaming dense stage) and ``table4/interp_stage`` (the
     paper's regularized interpolation) -- the stages the streaming/tiling
-    work optimises.
+    work optimises -- plus ``table5/video_warm`` (the temporal
+    warm-start live-camera scenario: fps with the band-only warm scan,
+    self-validation overhead included).
 
 Row-by-row diffing of two artifacts (per-stage speedup table)::
 
@@ -138,6 +140,12 @@ def main(argv: list[str] | None = None) -> int:
         if args.smoke:
             kw.update(streams=2, reps=1)
         lines += table5_multistream.run(**kw) or []
+        vkw = {}
+        if height:
+            vkw.update(height=height, width=width)
+        if args.smoke:
+            vkw.update(frames=12)     # cut at frame 6: recovery in-window
+        lines += table5_multistream.run_video(**vkw) or []
     if want("lm"):
         from benchmarks import lm_steps
         lines += lm_steps.run() or []

@@ -240,6 +240,53 @@ def dense_match_stream_xla(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_disp", "disp_min", "warm_band", "beta", "sigma",
+        "match_texture", "tile_rows", "precision",
+    ),
+)
+def dense_match_warm_xla(
+    desc_l: jax.Array,          # (H, W, 16) or (B, H, W, 16) int8
+    desc_r: jax.Array,
+    mu_l: jax.Array,            # (H, W) or (B, H, W) float32 warm prior
+    mu_r: jax.Array,
+    *,
+    num_disp: int,
+    disp_min: int,
+    warm_band: int,
+    beta: float,
+    sigma: float,
+    match_texture: int,
+    tile_rows: int = 16,
+    precision: str = "f32",
+) -> tuple[jax.Array, jax.Array]:
+    """Tiled XLA warm-start dense matching over the flat batch x tile grid.
+
+    Same row-tiling scaffolding as :func:`dense_match_stream_xla`, but
+    each tile runs the band-only warm scan
+    (:func:`repro.kernels.ref.dense_match_rows_warm_ref`): no grid-vector
+    bitmask input exists, the candidate set is the ``+-warm_band`` band
+    around the previous frame's disparity, and the prior term is the
+    transcendental-free surrogate.  Pure jnp, so it compiles natively on
+    every backend; the serving engine builds its warm wave programs from
+    this entry.
+    """
+    from repro.kernels import ref as _ref   # late import: kernels build on core
+
+    def one_tile(tile):
+        tdl, tdr, tml, tmr = tile
+        return _ref.dense_match_rows_warm_ref(
+            tdl, tdr, tml, tmr,
+            num_disp=num_disp, disp_min=disp_min, warm_band=warm_band,
+            beta=beta, sigma=sigma, match_texture=match_texture,
+            precision=precision,
+        )
+
+    return _map_row_tiles((desc_l, desc_r, mu_l, mu_r), one_tile, tile_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))
 def dense_both_views(
     desc_l: jax.Array,         # (H, W, 16) int8

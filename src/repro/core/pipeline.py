@@ -66,15 +66,20 @@ from repro.core.dense import (
     dense_both_views,
     dense_both_views_batched,
     dense_disparity,
+    dense_match_warm_xla,
 )
 from repro.core.filtering import filter_support
 from repro.core.grid_vector import build_grid_vector
 from repro.core.interpolation import interpolate_support
 from repro.core.params import ElasParams
 from repro.core.postprocess import postprocess
-from repro.core.prior import plane_prior, right_view_support
-from repro.core.support import descriptors_and_support, extract_support_grid_batched
-from repro.core.tiling import TileArg
+from repro.core.prior import (
+    plane_prior,
+    right_view_support,
+    support_from_disparity,
+)
+from repro.core.support import INVALID, descriptors_and_support, extract_support_grid_batched
+from repro.core.tiling import TileArg, TileSpec
 from repro.kernels.registry import resolve_dispatch
 
 
@@ -176,6 +181,123 @@ def ielas_dense_stage_batched(
 def ielas_interpolate_stage(support: jax.Array, p: ElasParams) -> jax.Array:
     """THE iELAS step: regularized interpolation completing the support grid."""
     return interpolate_support(support, p)
+
+
+def _warm_priors(
+    prev_disp: jax.Array, h: int, w: int, p: ElasParams
+) -> tuple[jax.Array, jax.Array]:
+    """Warm-start dense priors (mu_l, mu_r) from a previous disparity map.
+
+    The previous frame's delivered disparity is re-gridded onto the
+    support lattice (:func:`~repro.core.prior.support_from_disparity`),
+    interpolated with the paper's regularized rule, and planed into a
+    smooth prior; the left view then prefers the exact per-pixel previous
+    value wherever it was valid (the plane only covers the holes), while
+    the right view re-projects the re-gridded support exactly as the
+    cold path re-projects the searched support.
+    """
+    grid = interpolate_support(support_from_disparity(prev_disp, p), p)
+    mu_smooth = plane_prior(grid, h, w, p)
+    mu_l = jnp.where(prev_disp != INVALID, prev_disp, mu_smooth)
+    sup_r = interpolate_support(right_view_support(grid, p), p)
+    mu_r = plane_prior(sup_r, h, w, p)
+    return mu_l, mu_r
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "backend", "tile", "warm_band", "band_radius"),
+)
+def ielas_warm_dense_stage(
+    dl: jax.Array,             # (H, W, 16)
+    dr: jax.Array,
+    prev_disp: jax.Array,      # (H, W) previous frame's disparity (the seed)
+    p: ElasParams,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
+    warm_band: int = 8,
+    band_radius: Optional[int] = None,
+) -> jax.Array:
+    """Warm-start dense stage: previous-frame-seeded band-only matching.
+
+    The temporal sibling of :func:`ielas_dense_stage` for video streams:
+    no support search ran for this frame, so the prior comes from
+    ``prev_disp`` via :func:`_warm_priors` and the candidate set is ONLY
+    the ``+-warm_band`` band around it (the grid-vector bitmask does not
+    exist).  ``band_radius`` -- the serving engine's degraded-mode knob --
+    composes by intersection: the effective band is
+    ``min(warm_band, band_radius)``.  Bounded-disagreement (never
+    bitwise) against the cold stage; the serving engine's post-hoc
+    quality check owns that bound.
+    """
+    backend, tile = resolve_dispatch(backend, tile)
+    eff = warm_band if band_radius is None else min(warm_band, int(band_radius))
+    if eff < 0:
+        raise ValueError(f"warm band must be >= 0, got {eff}")
+    h, w = dl.shape[:2]
+    mu_l, mu_r = _warm_priors(prev_disp, h, w, p)
+    rows = tile.rows if isinstance(tile, TileSpec) else h
+    precision = tile.precision if isinstance(tile, TileSpec) else "f32"
+    disp_l, disp_r = dense_match_warm_xla(
+        dl, dr, mu_l, mu_r,
+        num_disp=p.num_disp, disp_min=p.disp_min, warm_band=eff,
+        beta=p.beta, sigma=p.sigma, match_texture=p.match_texture,
+        tile_rows=rows, precision=precision,
+    )
+    return postprocess(disp_l, disp_r, p)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "backend", "tile", "warm_band", "band_radius"),
+)
+def ielas_warm_dense_stage_batched(
+    dl: jax.Array,             # (B, H, W, 16)
+    dr: jax.Array,
+    prev_disp: jax.Array,      # (B, H, W)
+    p: ElasParams,
+    backend: Optional[str] = None,
+    tile: TileArg = None,
+    warm_band: int = 8,
+    band_radius: Optional[int] = None,
+) -> jax.Array:
+    """Wave-shaped warm dense stage: (B, H, W) final left maps.
+
+    Per-frame prior prep is vmapped (small); the band-only matching walks
+    the flat batch x row-tile grid through
+    :func:`~repro.core.dense.dense_match_warm_xla`, mirroring the cold
+    batched stage's tiling.
+    """
+    backend, tile = resolve_dispatch(backend, tile)
+    eff = warm_band if band_radius is None else min(warm_band, int(band_radius))
+    if eff < 0:
+        raise ValueError(f"warm band must be >= 0, got {eff}")
+    h, w = dl.shape[1:3]
+    mu_l, mu_r = jax.vmap(lambda d: _warm_priors(d, h, w, p))(prev_disp)
+    rows = tile.rows if isinstance(tile, TileSpec) else h
+    precision = tile.precision if isinstance(tile, TileSpec) else "f32"
+    disp_l, disp_r = dense_match_warm_xla(
+        dl, dr, mu_l, mu_r,
+        num_disp=p.num_disp, disp_min=p.disp_min, warm_band=eff,
+        beta=p.beta, sigma=p.sigma, match_texture=p.match_texture,
+        tile_rows=rows, precision=precision,
+    )
+    return jax.vmap(lambda a, b: postprocess(a, b, p))(disp_l, disp_r)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ielas_descriptor_stage_batched(
+    img_left: jax.Array,       # (B, H, W)
+    img_right: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Descriptors only: the warm wave's entire support-stage workload.
+
+    A warm wave skips the sparse support search and interpolation (its
+    prior rides in from the previous frame), so its "support" program
+    shrinks to descriptor extraction -- the other large term of the
+    measured warm speedup besides the band-only dense scan.
+    """
+    return jax.vmap(desc_mod.extract)(img_left), jax.vmap(desc_mod.extract)(img_right)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "backend", "tile"))

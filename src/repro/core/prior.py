@@ -55,6 +55,38 @@ def plane_prior(
     return jnp.where(fxb >= fyb, upper, lower)
 
 
+@functools.partial(jax.jit, static_argnames=("p",))
+def support_from_disparity(
+    disp: jax.Array,           # (H, W) disparity map (INVALID sentinels ok)
+    p: ElasParams,
+) -> jax.Array:
+    """Re-grid a dense disparity map onto the support lattice.
+
+    Samples the map at the regular support-node coordinates
+    (``candidate_step // 2 + i * candidate_step``, the same lattice
+    :func:`plane_prior` interpolates from), yielding a (GH, GW) support
+    grid.  INVALID pixels stay INVALID -- downstream callers run
+    :func:`~repro.core.interpolation.interpolate_support` to fill the
+    holes, exactly as they do for the sparse support search's output.
+    This is the warm-start seam: frame *t-1*'s delivered disparity
+    becomes frame *t*'s plane prior without re-running the support
+    search.
+    """
+    h, w = disp.shape
+    gh, gw = p.grid_shape(h, w)
+    step = p.candidate_step
+    off = step // 2
+    # Strided slice, not an advanced-index gather: the node lattice is
+    # static, so this is the same Mosaic-friendly access pattern the
+    # support decision uses for candidate-column texture.
+    return jax.lax.slice(
+        disp,
+        (off, off),
+        (off + (gh - 1) * step + 1, off + (gw - 1) * step + 1),
+        (step, step),
+    )
+
+
 def right_view_support(
     support_left: jax.Array,   # (GH, GW) left-view grid (may contain INVALID)
     p: ElasParams,

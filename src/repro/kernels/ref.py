@@ -824,6 +824,97 @@ def dense_match_rows_stream_ref(
     return finish(emin_l, best_l, desc_l), finish(emin_r, best_r, desc_r)
 
 
+def dense_match_rows_warm_ref(
+    desc_l: jax.Array,          # (bh, W, 16) int8
+    desc_r: jax.Array,          # (bh, W, 16) int8
+    mu_l: jax.Array,            # (bh, W) float32 warm prior (prev-frame seed)
+    mu_r: jax.Array,            # (bh, W) float32
+    *,
+    num_disp: int,
+    disp_min: int,
+    warm_band: int,
+    beta: float,
+    sigma: float,
+    match_texture: int,
+    precision: str = "f32",
+) -> tuple[jax.Array, jax.Array]:
+    """Warm-start dense matching: band-only scan around a trusted prior.
+
+    The temporal variant of :func:`dense_match_rows_stream_ref` for video
+    streams whose prior is the PREVIOUS frame's delivered disparity
+    rather than this frame's sparse support search.  Two deliberate
+    departures from the cold scan, both of which are why the warm path is
+    bounded-disagreement (validated by the serving engine's post-hoc
+    check), never bitwise, against cold:
+
+    * the candidate set is ONLY the band ``|d - round(mu)| <= warm_band``
+      (clipped to the search range) -- no grid-vector bitmask exists
+      because the warm wave never ran the support search; and
+    * the prior energy is the transcendental-free rational surrogate
+      ``-1 / (1 + diff^2 / (2 sigma^2))`` -- same shape (monotone in
+      ``|diff|``, bounded, minimum at ``mu``) without the per-step
+      ``log``/``exp`` pair, which together with the dropped bitmask fold
+      is where the measured >= 1.5x dense-stage speedup comes from.
+
+    The scan still covers the full ``[disp_min, disp_min + num_disp)``
+    sweep (the jaxpr stays O(1) in D and far objects stay reachable
+    whenever the prior says so); out-of-band steps are masked, not
+    skipped.  Validity, tie-breaking and INVALID sentinels follow the
+    cold scan exactly, so :mod:`repro.core.postprocess` consumes both
+    identically.
+    """
+    bh, w, _ = desc_l.shape
+    sad_row, shift_left = _scan_sad_rows(
+        desc_l, desc_r, num_disp, disp_min, precision
+    )
+    u = jnp.arange(w, dtype=jnp.int32)[None, :]
+    lo_d = float(disp_min)
+    hi_d = float(disp_min + num_disp - 1)
+
+    def band(mu):
+        r = jnp.round(mu)
+        return (jnp.clip(r - warm_band, lo_d, hi_d),
+                jnp.clip(r + warm_band, lo_d, hi_d))
+
+    band_l = band(mu_l)
+    band_r = band(mu_r)
+    inv_2s2 = 1.0 / (2.0 * sigma * sigma)
+
+    def update(state, sad, valid, mu, bnd, d, df):
+        best_e, best_d = state
+        mask = (df >= bnd[0]) & (df <= bnd[1])
+        diff = df - mu
+        prior = -1.0 / (1.0 + diff * diff * inv_2s2)
+        e = beta * sad.astype(jnp.float32) + prior
+        e = jnp.where(mask & valid, e, BIGF)
+        better = e < best_e
+        return jnp.where(better, e, best_e), jnp.where(better, d, best_d)
+
+    def step_fn(carry, i):
+        left, right = carry
+        d = i + disp_min
+        df = d.astype(jnp.float32)
+        sad = sad_row(d)
+        left = update(left, sad, u >= d, mu_l, band_l, d, df)
+        right = update(right, shift_left(sad, d), u + d < w, mu_r, band_r, d, df)
+        return (left, right), None
+
+    def init():
+        return (jnp.full((bh, w), BIGF, jnp.float32),
+                jnp.zeros((bh, w), jnp.int32))
+
+    ((emin_l, best_l), (emin_r, best_r)), _ = jax.lax.scan(
+        step_fn, (init(), init()), jnp.arange(num_disp),
+        unroll=min(SCAN_UNROLL, num_disp),
+    )
+
+    def finish(emin, best, desc):
+        valid = (emin < BIGF) & (_texture_rows(desc) >= match_texture)
+        return jnp.where(valid, best.astype(jnp.float32), INVALID)
+
+    return finish(emin_l, best_l, desc_l), finish(emin_r, best_r, desc_r)
+
+
 # --------------------------------------------------------------------------
 # median kernel oracle
 # --------------------------------------------------------------------------

@@ -11,3 +11,9 @@ from repro.serving.stereo_service import (  # noqa: F401
     ServiceStats,
     StereoService,
 )
+from repro.serving.warmstart import (  # noqa: F401
+    WarmState,
+    frame_thumbnail,
+    prior_disagreement,
+    scene_change_score,
+)

@@ -25,6 +25,24 @@ Trigger matching (all conditions AND together):
 ``kind="delay"`` sleeps ``delay_s`` instead of raising -- used to build
 queue pressure for admission-control / degraded-mode tests without any
 frame actually failing.
+
+Warm-start injection (PR 10): specs with ``stage="warm"`` fire at warm
+CLASSIFICATION time (no wave exists yet, so only ``request_id`` /
+``times`` match) and carry one of the :data:`WARM_KINDS` instead of
+raising:
+
+* ``"scene_cut"``    -- force the scene-change detector's score to
+  infinity for the matched frame, proving the detector-fallback path
+  (the frame must come out bitwise-cold and reset the stream's state).
+* ``"corrupt_prior"``-- corrupt the frame's pinned prior AFTER a warm
+  classification (the in-flight copy only; stream state is untouched),
+  proving the post-hoc disagreement check triggers a cold re-run.
+* ``"stale_state"``  -- corrupt the stream's STORED state before
+  classification (the thumbnail still matches, so the frame classifies
+  warm on a poisoned seed), proving silent state corruption is caught
+  by the same post-hoc check.
+
+The engine polls these via :meth:`FaultPlan.warm_kind`.
 """
 from __future__ import annotations
 
@@ -32,6 +50,10 @@ import dataclasses
 import threading
 import time
 from typing import Optional, Sequence
+
+
+#: Fault kinds valid for ``stage="warm"`` specs (see module docstring).
+WARM_KINDS = ("scene_cut", "corrupt_prior", "stale_state")
 
 
 class FaultInjected(RuntimeError):
@@ -52,9 +74,15 @@ class FaultSpec:
     message: str = "injected fault"
 
     def __post_init__(self) -> None:
-        if self.stage not in ("support", "dense", "emit"):
+        if self.stage not in ("support", "dense", "emit", "warm"):
             raise ValueError(f"unknown stage {self.stage!r}")
-        if self.kind not in ("raise", "delay"):
+        if self.stage == "warm":
+            if self.kind not in WARM_KINDS:
+                raise ValueError(
+                    f"warm-stage specs need a kind in {WARM_KINDS}, "
+                    f"got {self.kind!r}"
+                )
+        elif self.kind not in ("raise", "delay"):
             raise ValueError(f"unknown kind {self.kind!r}")
         if self.times is not None and self.times < 1:
             raise ValueError(f"times must be >= 1 or None, got {self.times}")
@@ -86,6 +114,8 @@ class FaultPlan:
         for i, spec in enumerate(self.specs):
             if spec.stage != stage:
                 continue
+            if spec.stage == "warm":
+                continue            # warm specs fire via warm_kind(), not here
             if spec.wave is not None and spec.wave != wave_index:
                 continue
             if spec.request_id is not None and spec.request_id not in rids:
@@ -101,3 +131,23 @@ class FaultPlan:
                 f"{spec.message} (stage={stage}, wave={wave_index}, "
                 f"requests={sorted(rids)})"
             )
+
+    def warm_kind(self, request_id: int) -> Optional[str]:
+        """The first matching warm-stage spec's kind for one frame, or None.
+
+        Called by the serving engine once per frame at warm classification
+        time; a match consumes one firing (``times`` semantics as in
+        :meth:`check`).  Only ``request_id`` filters apply -- no wave
+        exists yet when a frame is classified.
+        """
+        for i, spec in enumerate(self.specs):
+            if spec.stage != "warm":
+                continue
+            if spec.request_id is not None and spec.request_id != request_id:
+                continue
+            with self._lock:
+                if spec.times is not None and self._fired[i] >= spec.times:
+                    continue
+                self._fired[i] += 1
+            return spec.kind
+        return None

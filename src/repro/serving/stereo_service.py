@@ -90,6 +90,62 @@ containment rules (proved by ``tests/test_serving_faults.py`` via the
   (step = waves processed), so ``stats()`` reports per-stage liveness and
   stragglers, and ``stop(drain=True)`` detects a dead/aborted pipeline
   promptly instead of sleeping out its timeout.
+
+* **Temporal warm-start** (``warm_start=True``; proved by
+  tests/test_warm_start.py and the warm cases of the faults suite) --
+  per-stream state (the last successfully delivered frame's disparity +
+  a block-mean thumbnail of its left image,
+  :class:`~repro.serving.warmstart.WarmState`) seeds the next frame:
+  warm-classified frames skip the sparse support search (their support
+  program is descriptor extraction only) and run a band-only dense scan
+  within ``+-warm_band`` of the previous disparity
+  (:func:`~repro.core.pipeline.ielas_warm_dense_stage_batched`).  The
+  state machine around it:
+
+  - **Classification** happens ONCE, as the frame enters assembly, and
+    pins the frame's prior at that instant (a state reset later in
+    flight cannot retroactively change an assembled wave).  A frame is
+    COLD when warm-start is off, the stream has no state (first frame,
+    or the state was reset), the state is not the frame's immediate
+    predecessor (``stale_seq``: something between them was lost, shed,
+    or reordered), the resolution changed, the warm streak hit
+    ``refresh_interval`` (bounded-drift forced refresh), or the
+    thumbnail SAD against the previous frame exceeds
+    ``scene_change_threshold`` (measured calibration: normal motion ~4
+    levels/px, cuts ~30; default threshold 20.0).  Every cold reason
+    except "warm-start off / no state" also RESETS the state, so the
+    cold frame that follows re-seeds the chain.  Cold frames run the
+    bitwise-unchanged cold programs -- the golden-frame conformance
+    suite pins first / refresh / post-cut frames of a warm stream
+    against the ``warm_start=False`` path.
+
+  - **Warm and cold frames never share a wave** (the wave key carries
+    the classification), so a warm wave's programs are uniform and the
+    cold path's programs are untouched.
+
+  - **Post-hoc self-check** -- at emit, every warm frame's result is
+    scored against the very prior that seeded it
+    (:func:`~repro.serving.warmstart.prior_disagreement`, INVALID
+    output pixels counting as maximal disagreement); past
+    ``rerun_threshold * num_disp`` (healthy warm frames measure <= 3%
+    of the range, corrupt-seeded ones >= 33%) the frame is
+    retroactively RE-RUN COLD on the single-frame fallback path (batch-1 cold programs -- bitwise
+    equal to the cold search) before delivery.  Warm waves keep their
+    host frames until emit precisely so this re-run is possible.
+
+  - **State transitions** -- state is written ONLY by a successful
+    in-sequence delivery; an error delivery (compute fault after
+    retry, admission shed) or an out-of-sequence delivery resets it,
+    so a quarantined or shed frame can never seed its successor.  Warm
+    state survives the single-frame retry path (the retry slices the
+    wave's pinned prior), and degraded mode composes by intersection
+    (a degraded warm wave runs band ``min(warm_band, degraded_band)``).
+
+  - ``serving/faults.py`` grows ``stage="warm"`` injection kinds
+    (``scene_cut`` / ``corrupt_prior`` / ``stale_state``) so every
+    transition above is deterministically testable; ``stats()`` exposes
+    ``warm_frames`` / ``cold_frames`` / ``scene_changes`` /
+    ``warm_refreshes`` / ``warm_reruns`` / ``warm_resets``.
 """
 from __future__ import annotations
 
@@ -108,14 +164,22 @@ import numpy as np
 from repro.core.params import ElasParams
 from repro.core.pipeline import (
     ielas_dense_stage_batched,
+    ielas_descriptor_stage_batched,
     ielas_interpolate_stage,
     ielas_support_stage_batched,
+    ielas_warm_dense_stage_batched,
 )
 from repro.core.tiling import TileArg, TileSpec
 from repro.kernels.registry import resolve_dispatch
 from repro.runtime.fault_tolerance import HeartbeatMonitor
 from repro.serving.admission import AdmissionController
 from repro.serving.faults import FaultPlan
+from repro.serving.warmstart import (
+    WarmState,
+    frame_thumbnail,
+    prior_disagreement,
+)
+from repro.serving import warmstart as _warmstart
 
 _EOS = object()          # end-of-stream sentinel flowing through the stages
 
@@ -183,6 +247,13 @@ class ServiceStats:
     shed_by_stream: tuple = ()     # ((stream_id, shed), ...)
     stage_liveness: tuple = ()     # ((stage, alive), ...) from the heartbeat
     stage_stragglers: tuple = ()   # stage names slower than the median
+    # ---- temporal warm-start (PR 10; all zero with warm_start=False) ----
+    warm_frames: int = 0           # frames classified warm (band-only scan)
+    cold_frames: int = 0           # warm-start frames classified cold
+    scene_changes: int = 0         # cold because the thumbnail SAD tripped
+    warm_refreshes: int = 0        # cold because the streak hit refresh_interval
+    warm_reruns: int = 0           # warm frames re-run cold by the post-hoc check
+    warm_resets: int = 0           # state dropped (error/shed/out-of-seq/stale)
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +270,14 @@ class WavePrograms:
     dense_degraded: object = None  # same, with the narrowed prior band
                                    # (present only when the cache was built
                                    # with degraded_radius)
+    # warm-start variants (present only when the cache was built with
+    # warm_band; warm and cold frames never share a wave, so a warm wave
+    # runs exactly this pair):
+    support_warm: object = None    # (B,H,W)x2 -> (dl, dr): descriptors only,
+                                   # no sparse support search
+    dense_warm: object = None      # (dl, dr, prior) -> (B,H,W) disparity,
+                                   # band-only scan around the prior
+    dense_warm_degraded: object = None   # band = min(warm_band, degraded)
 
 
 class FrameProgramCache:
@@ -229,12 +308,20 @@ class FrameProgramCache:
     With ``degraded_radius`` set, every program additionally carries a
     ``dense_degraded`` variant whose plane-prior band is narrowed to that
     radius -- the serving engine's overload quality-for-latency knob.
+    With ``warm_band`` set, every program additionally carries the
+    warm-start pair (``support_warm``: descriptor extraction only;
+    ``dense_warm``: the band-only scan seeded by a previous disparity) --
+    and, when combined with ``degraded_radius``, a ``dense_warm_degraded``
+    variant whose band is the INTERSECTION ``min(warm_band,
+    degraded_radius)`` (both narrow the same scan, so overload pressure
+    composes with temporal coherence instead of overriding it).
     """
 
     def __init__(self, params: ElasParams, batch: int,
                  backend: Optional[str] = None, bucket: int = 1,
                  tile: TileArg = None,
-                 degraded_radius: Optional[int] = None):
+                 degraded_radius: Optional[int] = None,
+                 warm_band: Optional[int] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if bucket < 1:
@@ -242,6 +329,10 @@ class FrameProgramCache:
         if degraded_radius is not None and degraded_radius < 0:
             raise ValueError(
                 f"degraded_radius must be >= 0 or None, got {degraded_radius}"
+            )
+        if warm_band is not None and warm_band < 0:
+            raise ValueError(
+                f"warm_band must be >= 0 or None, got {warm_band}"
             )
         self.params = params
         self.batch = batch
@@ -251,6 +342,7 @@ class FrameProgramCache:
         self.backend, self.tile = resolve_dispatch(backend, tile)
         self.bucket = bucket
         self.degraded_radius = degraded_radius
+        self.warm_band = warm_band
         self.hits = 0
         self.misses = 0
         self.calibrations = 0
@@ -348,6 +440,12 @@ class FrameProgramCache:
         prog.dense(dl, dr, sup).block_until_ready()
         if prog.dense_degraded is not None:
             prog.dense_degraded(dl, dr, sup).block_until_ready()
+        if prog.dense_warm is not None:
+            wdl, wdr = prog.support_warm(zeros, zeros)
+            prior = jnp.zeros((prog.batch, *prog.key), jnp.float32)
+            prog.dense_warm(wdl, wdr, prior).block_until_ready()
+            if prog.dense_warm_degraded is not None:
+                prog.dense_warm_degraded(wdl, wdr, prior).block_until_ready()
 
     def _build(self, key: tuple, batch: int) -> WavePrograms:
         p, backend, tile = self.params, self.backend, self.tile
@@ -381,12 +479,44 @@ class FrameProgramCache:
 
             dense_degraded = jax.jit(dense_wave_degraded)
 
+        support_warm = dense_warm = dense_warm_degraded = None
+        if self.warm_band is not None:
+            band = self.warm_band
+
+            def support_warm_wave(left, right):
+                # Warm waves skip the sparse support search entirely: the
+                # previous frame's disparity replaces it as the prior, so
+                # the support stage reduces to descriptor extraction.
+                return ielas_descriptor_stage_batched(left, right)
+
+            def dense_warm_wave(dl, dr, prior):
+                return ielas_warm_dense_stage_batched(
+                    dl, dr, prior, p, backend=backend, tile=tile,
+                    warm_band=band,
+                )
+
+            support_warm = jax.jit(support_warm_wave)
+            dense_warm = jax.jit(dense_warm_wave)
+            if self.degraded_radius is not None:
+                dradius = self.degraded_radius
+
+                def dense_warm_degraded_wave(dl, dr, prior):
+                    return ielas_warm_dense_stage_batched(
+                        dl, dr, prior, p, backend=backend, tile=tile,
+                        warm_band=band, band_radius=dradius,
+                    )
+
+                dense_warm_degraded = jax.jit(dense_warm_degraded_wave)
+
         return WavePrograms(
             key=key,
             batch=batch,
             support=jax.jit(support_wave),
             dense=jax.jit(dense_wave),
             dense_degraded=dense_degraded,
+            support_warm=support_warm,
+            dense_warm=dense_warm,
+            dense_warm_degraded=dense_warm_degraded,
         )
 
 
@@ -414,8 +544,13 @@ class _Request:
     h: int
     w: int
     t_submit: float
-    seq: int = 0               # per-stream submission sequence (in_order)
+    seq: int = 0               # per-stream submission sequence (in_order
+                               # reordering AND warm-start chain identity)
     deadline: Optional[float] = None   # absolute time.monotonic() budget
+    # warm-start classification result, pinned at assembly time:
+    warm: bool = False                 # ride a warm (band-only) wave
+    prior: Optional[np.ndarray] = None  # (h, w) seed disparity (warm only)
+    thumb: Optional[np.ndarray] = None  # left-frame thumbnail (warm_start only)
 
 
 @dataclasses.dataclass
@@ -426,6 +561,8 @@ class _Wave:
     right: object
     index: int = 0                 # global wave-assembly index (fault keys)
     degraded: bool = False         # run the narrowed-band dense program
+    warm: bool = False             # run the warm (band-only) programs
+    prior: object = None           # (B, H, W) device prior (warm waves only)
     programs: Optional[WavePrograms] = None
     mid: Optional[tuple] = None    # (dl, dr, support) between stages
     disp: object = None
@@ -486,6 +623,32 @@ class StereoService:
     degraded_band: plane-prior band half-width for degraded waves (the
                  normal band is ``params.plane_radius``; the streaming
                  dense scan's cost is linear in band width).
+    warm_start:  enable temporal warm-start for video streams (see the
+                 module docstring's failure-model section): each stream's
+                 last successfully delivered frame seeds the next frame's
+                 dense search, guarded by the scene-change detector, the
+                 prior-integrity state machine, the bounded-drift forced
+                 refresh, and the post-hoc disagreement re-run.  Cold
+                 frames (including every frame with ``warm_start=False``)
+                 run the bitwise-unchanged cold programs.
+    warm_band:   disparity band half-width for warm frames -- the scan
+                 searches ``prior +- warm_band`` per pixel (cost linear in
+                 band width, like ``degraded_band``; the two compose by
+                 ``min`` when a warm wave runs degraded).
+    scene_change_threshold: thumbnail-SAD score past which a frame is
+                 declared a scene cut and runs cold with a state reset.
+                 Measured calibration: normal motion scores ~4, cuts ~30.
+    refresh_interval: force a cold frame (bounded-drift refresh) after
+                 this many consecutive warm frames.
+    rerun_threshold: post-hoc disagreement bound as a FRACTION of the
+                 disparity range (``num_disp``): a warm result whose
+                 :func:`~repro.serving.warmstart.prior_disagreement`
+                 against its own seed exceeds ``rerun_threshold *
+                 num_disp`` is retroactively re-run cold.  A fraction --
+                 not levels -- because the signal is dominated by the
+                 INVALID-pixel term, which is weighted ``num_disp``.
+                 Measured: healthy warm frames score <= 0.03 of the
+                 range, frames seeded by a corrupted prior >= 0.33.
     heartbeat_timeout: stage heartbeat staleness (seconds) after which a
                  stage thread reports dead in :meth:`stats`.
     clock:       monotonic clock for the heartbeat monitor (injectable for
@@ -502,6 +665,11 @@ class StereoService:
                  degrade_watermark: Optional[int] = None,
                  clear_watermark: Optional[int] = None,
                  degraded_band: int = 1,
+                 warm_start: bool = False,
+                 warm_band: int = 8,
+                 scene_change_threshold: float = 20.0,
+                 refresh_interval: int = 30,
+                 rerun_threshold: float = 0.15,
                  heartbeat_timeout: float = 60.0,
                  clock: Callable[[], float] = time.monotonic):
         if depth < 1:
@@ -510,6 +678,18 @@ class StereoService:
             raise ValueError(
                 f"max_wave_failures must be >= 1, got {max_wave_failures}"
             )
+        if warm_start:
+            if warm_band < 0:
+                raise ValueError(f"warm_band must be >= 0, got {warm_band}")
+            if refresh_interval < 1:
+                raise ValueError(
+                    f"refresh_interval must be >= 1, got {refresh_interval}"
+                )
+            if not 0.0 < rerun_threshold <= 1.0:
+                raise ValueError(
+                    f"rerun_threshold is a fraction of the disparity range "
+                    f"in (0, 1], got {rerun_threshold}"
+                )
         self.params = params
         self.batch = batch
         self.depth = depth
@@ -518,6 +698,11 @@ class StereoService:
         self.wave_linger = wave_linger
         self.fault_plan = fault_plan
         self.max_wave_failures = max_wave_failures
+        self.warm_start = warm_start
+        self.warm_band = warm_band
+        self.scene_change_threshold = float(scene_change_threshold)
+        self.refresh_interval = refresh_interval
+        self.rerun_threshold = float(rerun_threshold)
         self.heartbeat_timeout = heartbeat_timeout
         self._clock = clock
         self._admission = AdmissionController(
@@ -528,6 +713,7 @@ class StereoService:
             params, batch, backend, bucket=bucket, tile=tile,
             degraded_radius=(degraded_band
                              if degrade_watermark is not None else None),
+            warm_band=(warm_band if warm_start else None),
         )
         # mirror the cache's resolved dispatch (device-aware defaults)
         self.backend = self._cache.backend
@@ -548,6 +734,19 @@ class StereoService:
             hosts=list(_STAGES), timeout=heartbeat_timeout, clock=clock
         )
         self._stage_steps: dict = {s: 0 for s in _STAGES}
+
+        # Warm-start lock: guards the per-stream WarmState map and the warm
+        # counters.  Touched by assembly (classification), emit (post-hoc
+        # re-run accounting) and delivery (state transitions).  Leaf lock:
+        # nothing takes _slock or _olock while holding it.
+        self._wlock = threading.Lock()
+        self._warm_state: dict = {}    # stream_id -> WarmState
+        self._warm_frames = 0
+        self._cold_frames = 0
+        self._scene_changes = 0
+        self._warm_refreshes = 0
+        self._warm_reruns = 0
+        self._warm_resets = 0
 
         self._slock = threading.Lock()
         # Ordering lock: guards the in_order reordering state, which is
@@ -769,11 +968,13 @@ class StereoService:
         with self._slock:
             rid = self._next_request_id
             self._next_request_id += 1
-            # Sequence numbers exist only for the in_order reordering
-            # buffer; without it, skip the per-stream dict so a service fed
-            # fresh stream ids per client never accumulates bookkeeping.
+            # Sequence numbers exist for the in_order reordering buffer and
+            # for warm-start chain identity (the state machine must prove a
+            # frame's seed is its immediate predecessor); without either,
+            # skip the per-stream dict so a service fed fresh stream ids
+            # per client never accumulates bookkeeping.
             seq = 0
-            if self.in_order:
+            if self.in_order or self.warm_start:
                 seq = self._stream_seq[stream_id]
                 self._stream_seq[stream_id] = seq + 1
             if self._t_first_submit is None:
@@ -879,6 +1080,10 @@ class StereoService:
 
     def stats(self) -> ServiceStats:
         adm = self._admission.counters()
+        with self._wlock:
+            warm = (self._warm_frames, self._cold_frames,
+                    self._scene_changes, self._warm_refreshes,
+                    self._warm_reruns, self._warm_resets)
         dead = set(self._monitor.dead_hosts()) if self._threads else set()
         liveness = tuple(
             (s, s not in dead) for s in _STAGES
@@ -930,6 +1135,12 @@ class StereoService:
                 shed_by_stream=adm["shed_by_stream"],
                 stage_liveness=liveness,
                 stage_stragglers=stragglers,
+                warm_frames=warm[0],
+                cold_frames=warm[1],
+                scene_changes=warm[2],
+                warm_refreshes=warm[3],
+                warm_reruns=warm[4],
+                warm_resets=warm[5],
             )
 
     # ------------------------------------------------------- stage plumbing
@@ -966,7 +1177,9 @@ class StereoService:
             self._beat("assemble")
             draining = self._drain.is_set()
             try:
-                pending.append(self._ingest.get(timeout=0.02))
+                req = self._ingest.get(timeout=0.02)
+                self._classify_warm(req)
+                pending.append(req)
             except queue.Empty:
                 if draining and not pending:
                     self._put(self._waves, _EOS, "assemble")
@@ -992,18 +1205,23 @@ class StereoService:
 
             # Fill the head-of-line wave: linger briefly for same-bucket
             # requests, then dispatch padded rather than stall.  The wave
-            # width is the bucket's (possibly calibrated) batch.
+            # width is the bucket's (possibly calibrated) batch.  Warm and
+            # cold frames never share a wave (their programs differ), so
+            # the warm classification joins the grouping key.
             key = self._cache.bucket_shape(pending[0].h, pending[0].w)
+            warm = pending[0].warm
             width = self._cache.batch_for(*key)
             deadline = time.monotonic() + self.wave_linger
             while (not draining
                    and sum(self._cache.bucket_shape(r.h, r.w) == key
-                           for r in pending) < width):
+                           and r.warm == warm for r in pending) < width):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
                 try:
-                    pending.append(self._ingest.get(timeout=remaining))
+                    req = self._ingest.get(timeout=remaining)
+                    self._classify_warm(req)
+                    pending.append(req)
                 except queue.Empty:
                     break
 
@@ -1012,6 +1230,7 @@ class StereoService:
             candidates = [
                 r for r in pending
                 if self._cache.bucket_shape(r.h, r.w) == key
+                and r.warm == warm
             ]
             admitted, dead = self._admission.select(
                 candidates, width, time.monotonic()
@@ -1027,10 +1246,71 @@ class StereoService:
                 continue
             backlog = self._ingest.qsize() + len(pending) + len(admitted)
             degraded = self._admission.update_pressure(backlog)
-            wave = self._build_wave(key, admitted, width, degraded)
+            wave = self._build_wave(key, admitted, width, degraded, warm)
             if not self._put(self._waves, wave, "assemble"):
                 return
             self._step("assemble")
+
+    def _classify_warm(self, req: _Request) -> None:
+        """The warm/cold decision for one frame, pinned as it enters
+        assembly: stamps ``req.warm`` / ``req.prior`` / ``req.thumb`` and
+        advances the warm counters.  A no-op with ``warm_start=False`` --
+        the cold path never touches warm state, locks, or thumbnails."""
+        if not self.warm_start:
+            return
+        if req.deadline is not None and req.deadline < time.monotonic():
+            # Already expired: admission sheds it this same assembly pass.
+            # A doomed frame must not touch the stream's state or advance
+            # its streak (its shed delivery still resets the state).
+            return
+        fault = (self.fault_plan.warm_kind(req.request_id)
+                 if self.fault_plan is not None else None)
+        req.thumb = frame_thumbnail(req.left)
+        with self._wlock:
+            state = self._warm_state.get(req.stream_id)
+            if fault == "stale_state" and state is not None:
+                # Poison the STORED seed in place.  The thumbnail still
+                # matches, so classification goes warm on a corrupt prior
+                # -- the silent-corruption scenario; only the post-hoc
+                # disagreement check can catch it.
+                state.disparity = _warmstart.corrupt_disparity(
+                    state.disparity, self.params.disp_max
+                )
+            if fault == "scene_cut":
+                # Force the detector's verdict without touching the frame:
+                # the frame must come out bitwise-cold with a state reset.
+                warm, reason = False, "scene_change"
+            else:
+                warm, reason = _warmstart.classify(
+                    state, req.thumb, (req.h, req.w), req.seq,
+                    threshold=self.scene_change_threshold,
+                    refresh_interval=self.refresh_interval,
+                )
+            if warm:
+                req.warm = True
+                # Pin the prior NOW: a state reset later in flight (error
+                # delivery, scene cut on a younger frame) must not
+                # retroactively change an assembled wave.
+                req.prior = state.disparity.copy()
+                if fault == "corrupt_prior":
+                    # In-flight copy only; the stream state stays intact.
+                    req.prior = _warmstart.corrupt_disparity(
+                        req.prior, self.params.disp_max
+                    )
+                state.streak += 1
+                self._warm_frames += 1
+            else:
+                self._cold_frames += 1
+                if reason == "scene_change":
+                    self._scene_changes += 1
+                elif reason == "refresh":
+                    self._warm_refreshes += 1
+                elif reason in ("stale_seq", "resolution"):
+                    self._warm_resets += 1
+                # Every cold reason except "no state" resets the chain, so
+                # this frame's own delivery re-seeds it.
+                if state is not None:
+                    self._warm_state.pop(req.stream_id, None)
 
     def _shed_request(self, req: _Request) -> None:
         self._finish(req, None, error=(
@@ -1039,7 +1319,7 @@ class StereoService:
         ), shed=True)
 
     def _build_wave(self, key: tuple, reqs: list, width: int,
-                    degraded: bool = False) -> _Wave:
+                    degraded: bool = False, warm: bool = False) -> _Wave:
         bh, bw = key
         pad = width - len(reqs)
 
@@ -1054,8 +1334,19 @@ class StereoService:
         if pad:                     # replicate a real frame into padded slots
             lefts += [lefts[0]] * pad
             rights += [rights[0]] * pad
-        for r in reqs:              # emit only needs ids/shape/timing: release
-            r.left = r.right = None     # the host frames while waves are queued
+        prior = None
+        if warm:
+            # Stack the pinned per-frame priors (padded slots replicate a
+            # real one, like the frames above).  Warm requests KEEP their
+            # host frames/priors: the emit stage needs them for the
+            # post-hoc disagreement check and its cold re-run.
+            priors = [fit(r.prior) for r in reqs]
+            if pad:
+                priors += [priors[0]] * pad
+            prior = jnp.asarray(np.stack(priors))
+        else:
+            for r in reqs:          # emit only needs ids/shape/timing: release
+                r.left = r.right = None  # host frames while waves are queued
         with self._slock:
             index = self._waves_built
             self._waves_built += 1
@@ -1065,6 +1356,7 @@ class StereoService:
                 self._degraded_waves += 1
         return _Wave(
             key=key, requests=reqs, index=index, degraded=degraded,
+            warm=warm, prior=prior,
             left=jnp.asarray(np.stack(lefts)),
             right=jnp.asarray(np.stack(rights)),
         )
@@ -1086,40 +1378,61 @@ class StereoService:
             wave.programs = self._cache.get(
                 *wave.key, batch=int(wave.left.shape[0])
             )
-            wave.mid = wave.programs.support(wave.left, wave.right)
+            support = (wave.programs.support_warm if wave.warm
+                       else wave.programs.support)
+            wave.mid = support(wave.left, wave.right)
             jax.block_until_ready(wave.mid)
             wave.left = wave.right = None
         else:
             prog = wave.programs
-            dense = (prog.dense_degraded
-                     if wave.degraded and prog.dense_degraded is not None
-                     else prog.dense)
-            wave.disp = dense(*wave.mid)
+            if wave.warm:
+                dense = (prog.dense_warm_degraded
+                         if wave.degraded
+                         and prog.dense_warm_degraded is not None
+                         else prog.dense_warm)
+                wave.disp = dense(*wave.mid, wave.prior)
+            else:
+                dense = (prog.dense_degraded
+                         if wave.degraded and prog.dense_degraded is not None
+                         else prog.dense)
+                wave.disp = dense(*wave.mid)
             jax.block_until_ready(wave.disp)
             wave.mid = None
+            wave.prior = None
 
     def _retry_slot(self, wave: _Wave, stage: str, slot: int) -> _Wave:
         """The bounded retry: re-run ONE slot of a failed wave as a
         single-frame fallback wave (batch-1 program; a cold-path compile
-        the first time a bucket needs it)."""
+        the first time a bucket needs it).  A warm wave's slot retries on
+        the batch-1 WARM programs with its slice of the wave's pinned
+        prior -- warm state survives the retry path."""
         req = wave.requests[slot]
         with self._slock:
             self._retried += 1
         prog = self._cache.get(*wave.key, batch=1)
         sub = _Wave(key=wave.key, requests=[req], left=None, right=None,
-                    index=wave.index, degraded=wave.degraded, programs=prog)
+                    index=wave.index, degraded=wave.degraded, warm=wave.warm,
+                    programs=prog)
         if self.fault_plan is not None:
             self.fault_plan.check(stage, wave.index, (req.request_id,))
         if stage == "support":
-            sub.mid = prog.support(wave.left[slot:slot + 1],
-                                   wave.right[slot:slot + 1])
+            support = prog.support_warm if wave.warm else prog.support
+            sub.mid = support(wave.left[slot:slot + 1],
+                              wave.right[slot:slot + 1])
             jax.block_until_ready(sub.mid)
         else:
             mid = tuple(m[slot:slot + 1] for m in wave.mid)
-            dense = (prog.dense_degraded
-                     if wave.degraded and prog.dense_degraded is not None
-                     else prog.dense)
-            sub.disp = dense(*mid)
+            if wave.warm:
+                dense = (prog.dense_warm_degraded
+                         if wave.degraded
+                         and prog.dense_warm_degraded is not None
+                         else prog.dense_warm)
+                sub.disp = dense(*mid, wave.prior[slot:slot + 1])
+            else:
+                dense = (prog.dense_degraded
+                         if wave.degraded and prog.dense_degraded is not None
+                         else prog.dense)
+                sub.disp = dense(*mid)
             jax.block_until_ready(sub.disp)
         return sub
 
@@ -1222,9 +1535,51 @@ class StereoService:
                 self._consec_wave_failures = 0
             for slot, req in enumerate(wave.requests):
                 out = np.ascontiguousarray(disp[slot, : req.h, : req.w])
-                self._finish(req, out)
+                error = None
+                if wave.warm:
+                    out, error = self._posthoc_check(req, out, wave.key)
+                    req.left = req.right = req.prior = None
+                self._finish(req, out, error=error)
             wave.disp = None
             self._step("emit")
+
+    def _posthoc_check(self, req: _Request, out: np.ndarray,
+                       key: tuple) -> tuple:
+        """The warm self-check at emit: score the result against the very
+        prior that seeded it; past ``rerun_threshold * num_disp`` the frame
+        is retroactively re-run COLD on the batch-1 fallback programs
+        (bitwise equal to the cold search).  Returns ``(out, error)``."""
+        score = prior_disagreement(out, req.prior, self.params.num_disp)
+        limit = self.rerun_threshold * self.params.num_disp
+        if score <= limit:
+            return out, None
+        with self._wlock:
+            self._warm_reruns += 1
+        try:
+            return self._run_cold_single(req, key), None
+        except Exception as e:             # noqa: BLE001 -- contained: the
+            # re-run failing fails only this frame, like any compute fault
+            return None, (
+                f"warm post-hoc cold re-run failed: {e!r} "
+                f"(disagreement {score:.1f} levels, limit {limit:.1f})"
+            )
+
+    def _run_cold_single(self, req: _Request, key: tuple) -> np.ndarray:
+        """One frame through the batch-1 COLD wave programs, from its host
+        frames (warm requests keep them until emit for exactly this)."""
+        bh, bw = key
+
+        def fit(img: np.ndarray) -> np.ndarray:
+            h, w = img.shape
+            if (h, w) == (bh, bw):
+                return img
+            return np.pad(img, ((0, bh - h), (0, bw - w)), mode="edge")
+
+        prog = self._cache.get(*key, batch=1)
+        dl, dr, sup = prog.support(jnp.asarray(fit(req.left)[None]),
+                                   jnp.asarray(fit(req.right)[None]))
+        disp = prog.dense(dl, dr, sup)
+        return np.ascontiguousarray(np.asarray(disp)[0, : req.h, : req.w])
 
     # ------------------------------------------------------------ delivery
     def _finish(self, req: _Request, out: Optional[np.ndarray],
@@ -1262,6 +1617,31 @@ class StereoService:
                  error: Optional[str] = None, shed: bool = False) -> None:
         now = time.monotonic()
         lat = now - req.t_submit
+        if self.warm_start:
+            # Warm state transitions ride delivery -- the ONLY writer of
+            # per-stream state, so a frame can seed its successor only
+            # after it was actually delivered intact and in sequence.
+            with self._wlock:
+                state = self._warm_state.get(req.stream_id)
+                if error is not None:
+                    # Quarantined (compute fault after retry) or shed
+                    # frame: whatever state exists is now suspect -- the
+                    # next frame must re-seed cold.
+                    if state is not None:
+                        self._warm_state.pop(req.stream_id, None)
+                        self._warm_resets += 1
+                elif state is None or req.seq == state.seq + 1:
+                    self._warm_state[req.stream_id] = WarmState.from_delivery(
+                        out, req.thumb, req.seq,
+                        streak=state.streak if state is not None else 0,
+                    )
+                else:
+                    # Out-of-sequence delivery: the temporal chain is
+                    # broken (a frame between this one and the stored
+                    # seed is still in flight, or this frame arrived
+                    # late).  Reset rather than store a gapped seed.
+                    self._warm_state.pop(req.stream_id, None)
+                    self._warm_resets += 1
         with self._slock:
             self._inflight.pop(req.request_id, None)
             if error is None:

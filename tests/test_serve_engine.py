@@ -1,0 +1,128 @@
+"""ServeEngine internals: wave assembly, slot independence, cache reuse,
+and error propagation.
+
+tests/test_train_and_serve.py pins the engine's OUTPUT (greedy generation
+matches a hand-rolled prefill+decode); this file pins the scheduling
+machinery around it -- how requests are grouped into waves, that padded
+slots never leak into results, that every wave starts on fresh caches
+(lockstep slots cannot contaminate each other across waves or within
+them), and that a wave exceeding the KV-cache capacity fails loudly
+instead of silently truncating.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models.model import LMModel
+from repro.serving.engine import Request, ServeEngine
+
+TINY = ModelConfig(
+    name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=256, q_chunk=32, kv_chunk=32,
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return LMModel(TINY)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, lo=3, hi=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, TINY.vocab_size, size=int(rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+class TestWaveAssembly:
+    def test_requests_split_into_ceil_n_over_batch_waves(self, model, params):
+        engine = ServeEngine(model, params, batch=2, max_len=64)
+        seen = []
+        inner = engine._run_wave
+
+        def spy(wave):
+            seen.append([r.request_id for r in wave])
+            return inner(wave)
+
+        engine._run_wave = spy
+        outs = engine.generate(_prompts(5), max_new_tokens=2)
+        assert len(seen) == 3                      # ceil(5 / 2)
+        assert all(len(w) == 2 for w in seen)      # every wave full-width
+        assert [rid for w in seen for rid in w] == [0, 1, 2, 3, 4, -1]
+        assert len(outs) == 5                      # padding never returned
+
+    def test_padded_slot_does_not_change_real_results(self, model, params):
+        prompts = _prompts(3, seed=1)
+        solo = ServeEngine(model, params, batch=1, max_len=64)
+        batched = ServeEngine(model, params, batch=2, max_len=64)
+        # request 2 rides the final wave next to a padding slot
+        assert batched.generate(prompts, 4) == solo.generate(prompts, 4)
+
+    def test_variable_length_prompts_batch_losslessly(self, model, params):
+        # lockstep prefill: slots with different prompt lengths share one
+        # wave and still match their batch=1 output exactly
+        prompts = [np.arange(2, dtype=np.int32),
+                   np.arange(11, dtype=np.int32)]
+        wide = ServeEngine(model, params, batch=2, max_len=64)
+        solo = ServeEngine(model, params, batch=1, max_len=64)
+        assert wide.generate(prompts, 3) == solo.generate(prompts, 3)
+
+    def test_empty_request_list(self, model, params):
+        engine = ServeEngine(model, params, batch=2, max_len=64)
+        assert engine.generate([], max_new_tokens=3) == []
+
+
+class TestCacheReuse:
+    def test_waves_start_on_fresh_caches(self, model, params):
+        # the same prompt must generate the same tokens no matter which
+        # wave it rides -- state from earlier waves must not leak
+        p = np.asarray([7, 3, 11], np.int32)
+        engine = ServeEngine(model, params, batch=2, max_len=64)
+        outs = engine.generate([p, p, p, p, p], max_new_tokens=4)
+        assert all(o == outs[0] for o in outs)
+
+    def test_generate_is_deterministic_across_calls(self, model, params):
+        engine = ServeEngine(model, params, batch=2, max_len=64)
+        prompts = _prompts(4, seed=2)
+        assert (engine.generate(prompts, 4)
+                == engine.generate(prompts, 4))
+
+    def test_one_decode_program_serves_all_waves(self, model, params):
+        # the jitted decode step is traced per (batch, 1) token shape;
+        # mixed prompt lengths and multiple waves reuse the same program
+        engine = ServeEngine(model, params, batch=2, max_len=64)
+        engine.generate(_prompts(2, seed=3), max_new_tokens=2)
+        sizes0 = engine._decode_step._cache_size()
+        engine.generate(_prompts(4, lo=2, hi=12, seed=4), max_new_tokens=3)
+        assert engine._decode_step._cache_size() == sizes0 == 1
+
+
+class TestErrorPropagation:
+    def test_wave_exceeding_cache_capacity_fails_loudly(self, model, params):
+        engine = ServeEngine(model, params, batch=1, max_len=8)
+        long_prompt = np.arange(6, dtype=np.int32)
+        with pytest.raises(AssertionError, match="cache capacity"):
+            engine.generate([long_prompt], max_new_tokens=4)
+
+    def test_capacity_is_checked_per_wave_not_per_request(self, model, params):
+        # a short request sharing a wave with a long one inherits the
+        # wave's horizon -- the check must fire for the WAVE
+        engine = ServeEngine(model, params, batch=2, max_len=8)
+        with pytest.raises(AssertionError, match="cache capacity"):
+            engine.generate(
+                [np.arange(2, dtype=np.int32), np.arange(6, dtype=np.int32)],
+                max_new_tokens=4,
+            )
+
+    def test_request_records_tokens_up_to_max_new(self, model, params):
+        engine = ServeEngine(model, params, batch=1, max_len=32)
+        req = Request(0, np.asarray([1, 2, 3], np.int32), max_new_tokens=5)
+        engine._run_wave([req])
+        assert len(req.tokens) == 5
+        assert all(0 <= t < TINY.vocab_size for t in req.tokens)

@@ -1,0 +1,507 @@
+"""Temporal warm-start: the self-validating stateful video path.
+
+Four layers, mirroring the machinery:
+
+* the host-side primitives (thumbnails, scene scores, the post-hoc
+  disagreement metric, the pure classification state machine) -- no jit;
+* the coherent-sequence generator (``synthetic_stereo_sequence``): GT
+  must overlap EXACTLY between consecutive frames, and a ``cut_at``
+  frame must come from an independent scene;
+* the warm dense datapath (``support_from_disparity`` re-gridding, the
+  band-only warm scan, its batched variant, band intersection);
+* the serving engine end-to-end: cold frames of a warm stream (first /
+  forced-refresh / post-cut) stay BITWISE equal to the cold service and
+  the fused single-frame program, warm frames track a coherent scene
+  within an accuracy margin, and the warm counters tell the story.
+
+The fault-injection transitions (scene_cut / corrupt_prior / stale_state
+specs, quarantined and shed seeds, warm state surviving the retry path)
+live in the ``faults``-marked class at the bottom, which CI runs under
+the faults job with the rest of the containment suite.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.elas_stereo import SYNTH
+from repro.core.pipeline import (
+    ielas_descriptor_stage_batched,
+    ielas_disparity,
+    ielas_warm_dense_stage,
+    ielas_warm_dense_stage_batched,
+)
+from repro.core.prior import support_from_disparity
+from repro.core.support import INVALID
+from repro.data.stereo import synthetic_stereo_sequence
+from repro.serving import StereoService
+from repro.serving.faults import FaultPlan, FaultSpec
+from repro.serving.warmstart import (
+    WarmState,
+    classify,
+    corrupt_disparity,
+    frame_thumbnail,
+    prior_disagreement,
+    scene_change_score,
+)
+
+P = SYNTH.params
+
+# Warm frames trade a little accuracy for the narrowed search; measured
+# at 40x64 the bad-pixel rate is within +0.05 of cold (larger frames are
+# better: QVGA measures warm BELOW cold).  The tests assert a +0.10 bound.
+BAD_PX_MARGIN = 0.10
+
+
+def _seq(n, h=40, w=64, motion=2, cut_at=None, seed=1):
+    return synthetic_stereo_sequence(
+        n, height=h, width=w, d_max=24.0, motion=motion, cut_at=cut_at,
+        seed=seed,
+    )
+
+
+def _direct(left, right):
+    return np.asarray(
+        ielas_disparity(jnp.asarray(left, jnp.float32),
+                        jnp.asarray(right, jnp.float32), P)
+    )
+
+
+def _bad_px(disp, gt, tol=3.0):
+    valid = disp >= 0
+    assert valid.any()
+    return float((np.abs(disp - gt) > tol)[valid].mean())
+
+
+def _drive(svc, frames, stream_id=0):
+    """Live-camera pacing: frame t+1 is submitted only after t delivered
+    (the warm chain requires seq continuity at classification time)."""
+    outs = []
+    for t, (left, right, _gt) in enumerate(frames):
+        svc.submit(t, left, right, stream_id=stream_id)
+        got = svc.collect(1, timeout=120.0)
+        assert len(got) == 1, f"frame {t} never delivered"
+        outs.extend(got)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# host-side primitives (no jit)
+# ---------------------------------------------------------------------------
+class TestPrimitives:
+    def test_thumbnail_shape_and_block_means(self):
+        img = np.arange(32 * 48, dtype=np.float32).reshape(32, 48)
+        th = frame_thumbnail(img, stride=8)
+        assert th.shape == (4, 6)
+        assert np.isclose(th[0, 0], img[:8, :8].mean())
+        assert np.isclose(th[-1, -1], img[24:32, 40:48].mean())
+
+    def test_thumbnail_tiny_frame_falls_back_to_global_mean(self):
+        img = np.full((5, 5), 7.0, np.float32)
+        th = frame_thumbnail(img, stride=8)
+        assert th.shape == (1, 1) and th[0, 0] == 7.0
+
+    def test_scene_score_zero_for_identical_inf_for_shape_mismatch(self):
+        a = np.random.default_rng(0).random((6, 8)).astype(np.float32)
+        assert scene_change_score(a, a) == 0.0
+        assert scene_change_score(a, a[:4]) == float("inf")
+        assert scene_change_score(a, a + 3.0) == pytest.approx(3.0)
+
+    def test_prior_disagreement_tracks_delta(self):
+        prior = np.full((16, 16), 10.0, np.float32)
+        assert prior_disagreement(prior, prior, 64) == 0.0
+        assert prior_disagreement(prior + 2.0, prior, 64) == pytest.approx(2.0)
+
+    def test_prior_disagreement_invalid_output_is_maximal(self):
+        # A poisoned prior can't reveal itself through the in-band delta
+        # (bounded by the band width); it reveals itself by invalidating
+        # the output, which must be weighted at the full range.
+        prior = np.full((16, 16), 10.0, np.float32)
+        disp = np.full((16, 16), INVALID, np.float32)
+        assert prior_disagreement(disp, prior, 64) == 64.0
+
+    def test_prior_disagreement_skips_invalid_prior_pixels(self):
+        prior = np.full((16, 16), INVALID, np.float32)
+        disp = np.zeros((16, 16), np.float32)
+        # nothing to disagree with anywhere: conservatively maximal
+        assert prior_disagreement(disp, prior, 64) == 64.0
+        prior[::4, ::4] = 5.0          # exactly the subsampled lattice
+        disp[:] = 5.0
+        assert prior_disagreement(disp, prior, 64) == 0.0
+
+    def test_corrupt_disparity_stays_in_range_and_preserves_invalid(self):
+        d = np.array([[0.0, 20.0, INVALID], [63.0, 5.0, INVALID]], np.float32)
+        c = corrupt_disparity(d, 63.0)
+        assert np.array_equal(c == INVALID, d == INVALID)
+        valid = d != INVALID
+        assert (c[valid] >= 0).all() and (c[valid] <= 63.0).all()
+        assert not np.allclose(c[valid], d[valid])
+
+
+class TestClassify:
+    def _state(self, seq=4, shape=(40, 64), streak=0):
+        return WarmState(
+            disparity=np.zeros(shape, np.float32),
+            thumbnail=np.zeros((5, 8), np.float32),
+            shape=shape, seq=seq, streak=streak,
+        )
+
+    def _go(self, state, seq=5, shape=(40, 64), thumb=None, **kw):
+        kw.setdefault("threshold", 20.0)
+        kw.setdefault("refresh_interval", 30)
+        if thumb is None:
+            thumb = np.zeros((5, 8), np.float32)
+        return classify(state, thumb, shape, seq, **kw)
+
+    def test_no_state_is_cold(self):
+        assert self._go(None) == (False, "no_state")
+
+    def test_stale_seq_is_cold(self):
+        # the seed must be the frame's IMMEDIATE predecessor
+        assert self._go(self._state(seq=3)) == (False, "stale_seq")
+        assert self._go(self._state(seq=5)) == (False, "stale_seq")
+        assert self._go(self._state(seq=4))[0] is True
+
+    def test_resolution_switch_is_cold(self):
+        assert self._go(self._state(), shape=(48, 64)) == (False, "resolution")
+
+    def test_refresh_interval_bounds_the_streak(self):
+        ok, reason = self._go(self._state(streak=28), refresh_interval=30)
+        assert ok
+        ok, reason = self._go(self._state(streak=29), refresh_interval=30)
+        assert (ok, reason) == (False, "refresh")
+
+    def test_scene_change_is_cold(self):
+        loud = np.full((5, 8), 25.0, np.float32)
+        assert self._go(self._state(), thumb=loud) == (False, "scene_change")
+        quiet = np.full((5, 8), 10.0, np.float32)
+        assert self._go(self._state(), thumb=quiet)[0] is True
+
+
+# ---------------------------------------------------------------------------
+# the coherent-sequence generator
+# ---------------------------------------------------------------------------
+class TestSyntheticSequence:
+    def test_gt_overlaps_exactly_between_consecutive_frames(self):
+        m = 3
+        seq = _seq(6, motion=m)
+        assert len(seq) == 6
+        for t in range(5):
+            a, b = seq[t][2], seq[t + 1][2]
+            # sliding-window pan: no resampling, no drift
+            assert np.array_equal(a[:, m:], b[:, :-m])
+
+    def test_zero_motion_keeps_gt_static_but_noise_moves(self):
+        seq = _seq(3, motion=0)
+        assert np.array_equal(seq[0][2], seq[1][2])
+        assert not np.array_equal(seq[0][0], seq[1][0])   # sensor noise
+
+    def test_cut_splits_into_independent_scenes(self):
+        m, cut = 2, 3
+        seq = _seq(6, motion=m, cut_at=cut)
+        assert np.array_equal(seq[1][2][:, m:], seq[2][2][:, :-m])
+        assert not np.array_equal(seq[cut - 1][2][:, m:],
+                                  seq[cut][2][:, :-m])
+        # the second segment is coherent with itself again
+        assert np.array_equal(seq[cut][2][:, m:], seq[cut + 1][2][:, :-m])
+
+    def test_cut_is_visible_to_the_scene_detector(self):
+        seq = _seq(6, motion=2, cut_at=3)
+        thumbs = [frame_thumbnail(l) for l, _, _ in seq]
+        scores = [scene_change_score(thumbs[t + 1], thumbs[t])
+                  for t in range(5)]
+        cut_score = scores[2]              # frame 2 -> frame 3
+        others = scores[:2] + scores[3:]
+        assert cut_score > 20.0 > max(others)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            synthetic_stereo_sequence(0)
+        with pytest.raises(ValueError):
+            synthetic_stereo_sequence(4, motion=-1)
+        with pytest.raises(ValueError):
+            synthetic_stereo_sequence(4, cut_at=0)
+        with pytest.raises(ValueError):
+            synthetic_stereo_sequence(4, cut_at=4)
+
+    def test_frames_are_matchable(self):
+        left, right, gt = _seq(1)[0]
+        assert left.dtype == np.uint8 and gt.dtype == np.float32
+        disp = _direct(left, right)
+        assert _bad_px(disp, gt) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# the warm dense datapath
+# ---------------------------------------------------------------------------
+class TestWarmDenseStage:
+    def test_support_from_disparity_regrids_the_lattice(self):
+        h, w = 40, 64
+        disp = np.arange(h * w, dtype=np.float32).reshape(h, w)
+        disp[3, :] = INVALID
+        grid = np.asarray(support_from_disparity(jnp.asarray(disp), P))
+        gh, gw = P.grid_shape(h, w)
+        assert grid.shape == (gh, gw)
+        off, step = P.candidate_step // 2, P.candidate_step
+        assert np.array_equal(grid, disp[off::step, off::step][:gh, :gw])
+
+    def test_warm_stage_tracks_cold_quality(self):
+        (l0, r0, _g0), (l1, r1, g1) = _seq(2)
+        prev = _direct(l0, r0)
+        cold = _direct(l1, r1)
+        dl, dr = ielas_descriptor_stage_batched(
+            jnp.asarray(l1, jnp.float32)[None],
+            jnp.asarray(r1, jnp.float32)[None],
+        )
+        warm = np.asarray(ielas_warm_dense_stage(
+            dl[0], dr[0], jnp.asarray(prev), P, warm_band=8
+        ))
+        assert warm.shape == cold.shape
+        assert _bad_px(warm, g1) <= _bad_px(cold, g1) + BAD_PX_MARGIN
+        # ... and it should agree closely with the seed that produced it
+        assert prior_disagreement(warm, prev, P.num_disp) < 0.15 * P.num_disp
+
+    def test_batched_matches_single_frame_bitwise(self):
+        frames = _seq(3)
+        prevs = [_direct(l, r) for l, r, _ in frames[:2]]
+        dl, dr = ielas_descriptor_stage_batched(
+            jnp.asarray(np.stack([np.asarray(f[0], np.float32)
+                                  for f in frames[1:]])),
+            jnp.asarray(np.stack([np.asarray(f[1], np.float32)
+                                  for f in frames[1:]])),
+        )
+        batched = np.asarray(ielas_warm_dense_stage_batched(
+            dl, dr, jnp.asarray(np.stack(prevs)), P, warm_band=8
+        ))
+        for i in range(2):
+            single = np.asarray(ielas_warm_dense_stage(
+                dl[i], dr[i], jnp.asarray(prevs[i]), P, warm_band=8
+            ))
+            assert np.array_equal(batched[i], single)
+
+    def test_band_radius_composes_by_intersection(self):
+        (l0, r0, _), (l1, r1, _) = _seq(2)
+        prev = jnp.asarray(_direct(l0, r0))
+        dl, dr = ielas_descriptor_stage_batched(
+            jnp.asarray(l1, jnp.float32)[None],
+            jnp.asarray(r1, jnp.float32)[None],
+        )
+        wide = np.asarray(ielas_warm_dense_stage(
+            dl[0], dr[0], prev, P, warm_band=8
+        ))
+        narrow = np.asarray(ielas_warm_dense_stage(
+            dl[0], dr[0], prev, P, warm_band=8, band_radius=2
+        ))
+        direct2 = np.asarray(ielas_warm_dense_stage(
+            dl[0], dr[0], prev, P, warm_band=2
+        ))
+        # min(warm_band, band_radius) IS the effective band
+        assert np.array_equal(narrow, direct2)
+        assert not np.array_equal(narrow, wide)
+
+
+# ---------------------------------------------------------------------------
+# the serving engine, end to end
+# ---------------------------------------------------------------------------
+class TestWarmService:
+    def test_first_frame_is_bitwise_cold_then_chain_goes_warm(self):
+        frames = _seq(4)
+        with StereoService(P, batch=1, warm_start=True) as svc:
+            outs = _drive(svc, frames)
+            st = svc.stats()
+        assert all(c.ok for c in outs)
+        l0, r0, _ = frames[0]
+        assert np.array_equal(outs[0].disparity, _direct(l0, r0))
+        assert st.cold_frames == 1 and st.warm_frames == 3
+        assert st.warm_reruns == 0 and st.warm_resets == 0
+        for c, (_, _, gt) in zip(outs[1:], frames[1:]):
+            assert _bad_px(c.disparity, gt) < 0.25
+
+    def test_refresh_frame_is_bitwise_cold(self):
+        frames = _seq(5)
+        with StereoService(P, batch=1, warm_start=True,
+                           refresh_interval=3) as svc:
+            outs = _drive(svc, frames)
+            st = svc.stats()
+        # streaks of 2: frames 0, 3 cold (0 = no_state, 3 = refresh)
+        assert st.warm_refreshes == 1
+        assert st.cold_frames == 2 and st.warm_frames == 3
+        l3, r3, _ = frames[3]
+        assert np.array_equal(outs[3].disparity, _direct(l3, r3))
+
+    def test_scene_cut_falls_back_bitwise_cold(self):
+        cut = 2
+        frames = _seq(4, cut_at=cut)
+        with StereoService(P, batch=1, warm_start=True) as svc:
+            outs = _drive(svc, frames)
+            st = svc.stats()
+        assert st.scene_changes == 1
+        assert st.warm_frames == 2      # frames 1 and 3
+        lc, rc, _ = frames[cut]
+        assert np.array_equal(outs[cut].disparity, _direct(lc, rc))
+
+    def test_warm_off_is_the_default_and_untouched(self):
+        frames = _seq(2)
+        with StereoService(P, batch=1) as svc:
+            outs = _drive(svc, frames)
+            st = svc.stats()
+        assert st.warm_frames == st.cold_frames == 0
+        assert st.warm_reruns == st.warm_resets == 0
+        for c, (l, r, _) in zip(outs, frames):
+            assert np.array_equal(c.disparity, _direct(l, r))
+
+    def test_interleaved_streams_keep_independent_state(self):
+        frames_a = _seq(3, seed=1)
+        frames_b = _seq(3, seed=9)
+        with StereoService(P, batch=1, warm_start=True) as svc:
+            outs = []
+            for t in range(3):
+                la, ra, _ = frames_a[t]
+                lb, rb, _ = frames_b[t]
+                svc.submit(t, la, ra, stream_id=0)
+                outs.extend(svc.collect(1, timeout=120.0))
+                svc.submit(t, lb, rb, stream_id=1)
+                outs.extend(svc.collect(1, timeout=120.0))
+            st = svc.stats()
+        assert all(c.ok for c in outs)
+        # each stream pays exactly one cold (first) frame
+        assert st.cold_frames == 2 and st.warm_frames == 4
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError):
+            StereoService(P, warm_start=True, warm_band=-1)
+        with pytest.raises(ValueError):
+            StereoService(P, warm_start=True, refresh_interval=0)
+        with pytest.raises(ValueError):
+            StereoService(P, warm_start=True, rerun_threshold=0.0)
+
+
+# ---------------------------------------------------------------------------
+# fault-injected transitions (CI: the faults job)
+# ---------------------------------------------------------------------------
+@pytest.mark.faults
+class TestWarmFaults:
+    def _run(self, frames, plan=None, **kw):
+        kw.setdefault("batch", 1)
+        kw.setdefault("warm_start", True)
+        with StereoService(P, fault_plan=plan, **kw) as svc:
+            outs = _drive(svc, frames)
+            st = svc.stats()
+        return outs, st
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec(stage="warm", kind="raise")
+        FaultSpec(stage="warm", kind="scene_cut")       # valid
+
+    def test_warm_kind_matches_request_and_times(self):
+        plan = FaultPlan([
+            FaultSpec(stage="warm", kind="scene_cut", request_id=3),
+            FaultSpec(stage="warm", kind="corrupt_prior", times=1),
+        ])
+        assert plan.warm_kind(2) == "corrupt_prior"     # rid filter skips #0
+        assert plan.warm_kind(2) is None                # times=1 exhausted
+        assert plan.warm_kind(3) == "scene_cut"
+        # warm specs never fire through check()
+        plan2 = FaultPlan([FaultSpec(stage="warm", kind="scene_cut",
+                                     times=None)])
+        plan2.check("warm", 0, (0,))
+        assert plan2.fired(0) == 0
+
+    def test_injected_scene_cut_forces_bitwise_cold_and_reset(self):
+        frames = _seq(4)
+        plan = FaultPlan([FaultSpec(stage="warm", kind="scene_cut",
+                                    request_id=2)])
+        outs, st = self._run(frames, plan)
+        assert all(c.ok for c in outs)
+        l2, r2, _ = frames[2]
+        assert np.array_equal(outs[2].disparity, _direct(l2, r2))
+        assert st.scene_changes == 1 and st.warm_frames == 2
+        assert st.warm_reruns == 0       # a detector fallback, not a re-run
+
+    def test_corrupt_prior_triggers_posthoc_cold_rerun(self):
+        frames = _seq(4)
+        plan = FaultPlan([FaultSpec(stage="warm", kind="corrupt_prior",
+                                    request_id=2)])
+        outs, st = self._run(frames, plan)
+        assert all(c.ok for c in outs)
+        # the frame classified warm, disagreed with its poisoned seed at
+        # emit, and was retroactively re-run cold -- bitwise
+        l2, r2, _ = frames[2]
+        assert np.array_equal(outs[2].disparity, _direct(l2, r2))
+        assert st.warm_reruns == 1 and st.warm_frames == 3
+        assert outs[3].ok                # chain re-seeds and continues
+
+    def test_stale_state_corruption_is_caught_posthoc(self):
+        frames = _seq(4)
+        plan = FaultPlan([FaultSpec(stage="warm", kind="stale_state",
+                                    request_id=2)])
+        outs, st = self._run(frames, plan)
+        assert all(c.ok for c in outs)
+        l2, r2, _ = frames[2]
+        assert np.array_equal(outs[2].disparity, _direct(l2, r2))
+        assert st.warm_reruns == 1
+
+    def test_quarantined_seed_never_warms_its_successor(self):
+        frames = _seq(4)
+        # persistent dense fault on frame 1: batched attempt AND retry fail
+        plan = FaultPlan([FaultSpec(stage="dense", request_id=1,
+                                    times=None)])
+        outs, st = self._run(frames, plan)
+        assert outs[1].error is not None
+        assert outs[2].ok
+        l2, r2, _ = frames[2]
+        assert np.array_equal(outs[2].disparity, _direct(l2, r2))
+        assert st.warm_resets >= 1
+        assert st.failed_frames == 1
+
+    def test_shed_seed_never_warms_its_successor(self):
+        import time as _time
+        frames = _seq(3)
+        with StereoService(P, batch=1, warm_start=True) as svc:
+            outs = []
+            l0, r0, _ = frames[0]
+            svc.submit(0, l0, r0)
+            outs.extend(svc.collect(1, timeout=120.0))
+            l1, r1, _ = frames[1]
+            svc.submit(1, l1, r1, deadline=_time.monotonic() - 1.0)
+            outs.extend(svc.collect(1, timeout=120.0))
+            l2, r2, _ = frames[2]
+            svc.submit(2, l2, r2)
+            outs.extend(svc.collect(1, timeout=120.0))
+            st = svc.stats()
+        assert outs[1].error is not None and st.shed == 1
+        assert np.array_equal(outs[2].disparity, _direct(l2, r2))
+        assert st.warm_resets >= 1 and st.warm_frames == 0
+
+    def test_warm_state_survives_single_frame_retry(self):
+        frames = _seq(3)
+        # transient dense fault on frame 1's wave: the retry must run the
+        # WARM batch-1 program with the pinned prior slice and succeed
+        plan = FaultPlan([FaultSpec(stage="dense", wave=1, times=1)])
+        outs, st = self._run(frames, plan)
+        assert all(c.ok for c in outs)
+        assert st.retried == 1
+        assert st.warm_frames == 2 and st.warm_resets == 0
+        # frame 1 recovered WARM: its result still tracks the scene
+        assert _bad_px(outs[1].disparity, frames[1][2]) < 0.25
+
+    def test_degraded_warm_wave_uses_band_intersection(self):
+        # unit-level: the cache's degraded warm program equals the plain
+        # warm program run at min(warm_band, degraded_radius)
+        from repro.serving.stereo_service import FrameProgramCache
+        frames = _seq(2)
+        prev = jnp.asarray(_direct(*frames[0][:2]))[None]
+        cache = FrameProgramCache(P, batch=1, degraded_radius=2, warm_band=8)
+        prog = cache.get(40, 64, batch=1)
+        left = jnp.asarray(frames[1][0], jnp.float32)[None]
+        right = jnp.asarray(frames[1][1], jnp.float32)[None]
+        dl, dr = prog.support_warm(left, right)
+        degraded = np.asarray(prog.dense_warm_degraded(dl, dr, prev))
+        direct = np.asarray(ielas_warm_dense_stage_batched(
+            dl, dr, prev, P, backend=cache.backend, tile=cache.tile,
+            warm_band=2,
+        ))
+        assert np.array_equal(degraded, direct)
+        assert not np.array_equal(degraded,
+                                  np.asarray(prog.dense_warm(dl, dr, prev)))
